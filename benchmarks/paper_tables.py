@@ -1,0 +1,185 @@
+"""Benchmarks reproducing the paper's tables and figures.
+
+table1  — Table 1: #XBs, CR, latency, energy, utilization for ResNet-50/101
+          dense / EPIM / quantized rows (vs the paper's numbers).
+table2  — Table 2: quantization ablation (naive / +crossbar / +overlap):
+          reconstruction-MSE proxy + a small trained task (offline stand-in
+          for ImageNet accuracy; see DESIGN.md §7).
+table3  — Table 3: epitome + 50% element pruning parameter compression.
+fig4    — Figure 4: uniform epitome vs Channel Wrapping vs Evo-Search vs
+          EPIM-Opt (latency / energy / EDP).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.epitome import EpitomeSpec
+from repro.pim import resnet101_layers, resnet50_layers
+from repro.pim.evo import (
+    EvoConfig, all_layer_uniform_specs, candidate_specs, evolution_search,
+)
+from repro.pim.simulator import default_calibrated_simulator
+from repro.pim.xbar import count_crossbars, uniform_epitome_specs, utilization
+
+
+def table1(emit) -> None:
+    sim = default_calibrated_simulator()
+    cfg = sim.mapping
+    nets = {"ResNet50": resnet50_layers(), "ResNet101": resnet101_layers()}
+    paper = {
+        ("ResNet50", "dense", None): (13120, 1.00, 139.8, 214.0),
+        ("ResNet50", "epitome", None): (5696, 2.30, 167.7, 194.8),
+        ("ResNet50", "epitome", 9): (1424, 9.21, 50.9, 17.0),
+        ("ResNet50", "epitome", 7): (1076, 12.19, 45.2, 20.5),
+        ("ResNet50", "epitome", 5): (720, 18.12, 39.9, 13.7),
+        ("ResNet50", "epitome", 3): (618, 21.23, 37.0, 10.2),
+        ("ResNet101", "dense", None): (22912, 1.00, 189.7, 385.7),
+        ("ResNet101", "epitome", None): (10592, 2.16, 263.7, 364.8),
+        ("ResNet101", "epitome", 9): (2648, 8.65, 75.8, 32.2),
+        ("ResNet101", "epitome", 7): (1994, 11.49, 73.7, 39.5),
+        ("ResNet101", "epitome", 5): (1584, 14.46, 72.1, 29.2),
+        ("ResNet101", "epitome", 3): (734, 31.22, 63.4, 17.0),
+    }
+    for net, layers in nets.items():
+        dense_xb = count_crossbars(layers, cfg)
+        specs = uniform_epitome_specs(layers, 1024, 256, cfg)
+        for kind in ("dense", "epitome"):
+            sp = None if kind == "dense" else specs
+            for bits in (None, 9, 7, 5, 3):
+                if kind == "dense" and bits is not None:
+                    continue
+                wb = None if bits is None else [bits] * len(layers)
+                ab = None if bits is None else 9
+                r = sim.simulate(layers, sp, weight_bits=wb, act_bits=ab)
+                cr = dense_xb / r.xbars
+                p = paper.get((net, kind, bits))
+                ref = (f" paper[XB={p[0]} CR={p[1]} lat={p[2]}ms en={p[3]}mJ]"
+                       if p else "")
+                emit(f"table1/{net}/{kind}"
+                     + (f"/W{bits}A9" if bits else "/FP32"),
+                     r.latency * 1e6,
+                     f"XB={r.xbars};CR={cr:.2f};lat={r.latency*1e3:.1f}ms;"
+                     f"en={r.energy*1e3:.1f}mJ;util={r.utilization*100:.1f}%"
+                     + ref)
+
+
+def table2(emit) -> None:
+    """Quantization ablation: MSE proxy (lower = better accuracy direction)
+    + trained tiny-task accuracy for the three quantizer variants."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.quant import QuantConfig, quant_mse, fake_quant
+    spec = EpitomeSpec(M=2048, N=1024, m=1024, n=256, bm=128, bn=256)
+    key = jax.random.PRNGKey(0)
+    E = jax.random.normal(key, (spec.m, spec.n))
+    E = E.at[0, :8].set(18.0)          # edge outliers (low repetition)
+    variants = {
+        "naive": QuantConfig(bits=3, per_crossbar=False, overlap_weighted=False),
+        "+crossbar": QuantConfig(bits=3, per_crossbar=True, overlap_weighted=False),
+        "+overlap": QuantConfig(bits=3, per_crossbar=True, overlap_weighted=True),
+    }
+    paper = {"naive": 69.95, "+crossbar": 71.35, "+overlap": 71.59}
+    for name, qc in variants.items():
+        t0 = time.perf_counter()
+        mse = float(quant_mse(E, spec, qc))
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table2/resnet50-3bit/{name}", dt,
+             f"recon_mse={mse:.5f};paper_acc={paper[name]}")
+
+    # trained stand-in: 3-bit QAT probe on a hard synthetic task; the final
+    # loss (more sensitive than saturated accuracy) must follow the paper's
+    # ordering: naive > +crossbar > +overlap
+    import jax
+    from repro.core.layers import EpLayerConfig, apply_linear, init_linear
+    n_cls, n_samp = 256, 1024
+    for name, qc in variants.items():
+        cfg = EpLayerConfig(spec=spec, mode="folded", quant=qc)
+        k1, k2 = jax.random.split(key)
+        params = init_linear(k1, spec.M, spec.N, cfg)
+        Wt = jax.random.normal(k2, (spec.M, n_cls))
+        x = jax.random.normal(key, (n_samp, spec.M)) / np.sqrt(spec.M)
+        y = jnp.argmax(x @ Wt, -1)
+
+        def loss(p):
+            logits = apply_linear(p, x, cfg)[:, :n_cls]
+            return -jnp.mean(
+                jax.nn.log_softmax(logits)[jnp.arange(n_samp), y])
+
+        opt_state = jax.tree.map(jnp.zeros_like, params)
+        lr = 0.3
+        t0 = time.perf_counter()
+        vg = jax.jit(jax.value_and_grad(loss))
+        for _ in range(40):
+            l, g = vg(params)
+            opt_state = jax.tree.map(lambda m, gg: 0.9 * m + gg, opt_state, g)
+            params = jax.tree.map(lambda p, m: p - lr * m, params, opt_state)
+        logits = apply_linear(params, x, cfg)[:, :n_cls]
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == y))
+        emit(f"table2/tiny-task-3bit/{name}",
+             (time.perf_counter() - t0) * 1e6 / 40,
+             f"loss={float(l):.4f};acc={acc:.3f};paper_acc={paper[name]}")
+
+
+def table3(emit) -> None:
+    """Epitome + element pruning: parameter compression rates."""
+    import jax
+    import jax.numpy as jnp
+    paper = {("epitome", "r50"): 2.25, ("ep+prune", "r50"): 3.49,
+             ("epitome", "r101"): 2.08, ("ep+prune", "r101"): 3.64}
+    for net, layers in (("r50", resnet50_layers()), ("r101", resnet101_layers())):
+        sim = default_calibrated_simulator()
+        specs = uniform_epitome_specs(layers, 1024, 256, sim.mapping)
+        dense_params = sum(l.params for l in layers)
+        ep_params = sum((s.m * s.n if s else l.params)
+                        for l, s in zip(layers, specs))
+        cr = dense_params / ep_params
+        emit(f"table3/{net}/epitome", 0.0,
+             f"param_cr={cr:.2f};paper={paper[('epitome', net)]}")
+        # 50% element pruning on top of the epitome
+        pruned = ep_params * 0.5
+        cr_p = dense_params / pruned
+        emit(f"table3/{net}/epitome+prune50", 0.0,
+             f"param_cr={cr_p:.2f};paper={paper[('ep+prune', net)]}")
+
+
+def fig4(emit) -> None:
+    """Uniform 256x256 epitome vs the two optimizations, matched budget."""
+    sim = default_calibrated_simulator()
+    layers = resnet50_layers()
+    uni = all_layer_uniform_specs(layers, 256, 256, sim.mapping)
+    base = sim.simulate(layers)
+    r_uni = sim.simulate(layers, uni)
+    budget = r_uni.xbars
+    emit("fig4/baseline", base.latency * 1e6,
+         f"lat={base.latency*1e3:.1f}ms;en={base.energy*1e3:.1f}mJ")
+    emit("fig4/uniform-256x256", r_uni.latency * 1e6,
+         f"lat_x={r_uni.latency/base.latency:.2f};en_x={r_uni.energy/base.energy:.2f};"
+         f"paper=3.86x/2.13x")
+    r_wrap = sim.simulate(layers, uni, wrapping=True)
+    emit("fig4/channel-wrapping", r_wrap.latency * 1e6,
+         f"speedup={r_uni.latency/r_wrap.latency:.2f};"
+         f"en_save={r_uni.energy/r_wrap.energy:.2f};"
+         f"edp_save={r_uni.edp/r_wrap.edp:.2f}")
+    shapes = [(1024, 256), (512, 256), (256, 256), (2048, 256), (512, 128),
+              (256, 128), (128, 256), (128, 128), (2048, 512)]
+    cands = [candidate_specs(l, sim.mapping, shapes) for l in layers]
+    _, r_evo, _ = evolution_search(
+        layers, cands, sim, budget,
+        EvoConfig(population=64, iterations=30, objective="latency",
+                  wrapping=False, mutate_prob=0.1),
+        seeds=[uni])
+    emit("fig4/evo-search", r_evo.latency * 1e6,
+         f"speedup={r_uni.latency/r_evo.latency:.2f};"
+         f"en_save={r_uni.energy/r_evo.energy:.2f}")
+    _, r_opt, _ = evolution_search(
+        layers, cands, sim, budget,
+        EvoConfig(population=64, iterations=30, objective="edp",
+                  wrapping=True, mutate_prob=0.1),
+        seeds=[uni])
+    emit("fig4/EPIM-Opt", r_opt.latency * 1e6,
+         f"speedup={r_uni.latency/r_opt.latency:.2f};"
+         f"en_save={r_uni.energy/r_opt.energy:.2f};"
+         f"edp_save={r_uni.edp/r_opt.edp:.2f};paper=3.07x/2.36x/7.13x")

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-param EPIM-compressed LM for a few
+hundred steps on synthetic data, with checkpointing and restart.
+
+  PYTHONPATH=src python examples/train_epim_lm.py [--steps 300] [--dense]
+
+Compares the dense model vs the epitome (folded) model: similar loss curve
+with ~4x fewer weight parameters — the LM-scale analogue of the paper's
+crossbar compression.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.config import EpitomeSettings
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import SyntheticData
+from repro.train.loop import TrainConfig, init_state, make_train_step, train_loop
+from repro.train.optimizer import AdamWConfig
+
+
+def small_lm(epitome: bool) -> "ModelConfig":
+    """~100M-param gemma2-family config."""
+    ep = EpitomeSettings(enabled=epitome, target_cr=4.0, mode="folded",
+                         min_params=1 << 18, patch=(128, 128))
+    return dataclasses.replace(
+        get_config("gemma2-2b"),
+        name="epim-lm-100m",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab=32768, window=256,
+        epitome=ep)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/epim_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = small_lm(epitome=not args.dense)
+    params_abs = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_abs))
+    print(f"[example] {cfg.name} ({'dense' if args.dense else 'epitome'}): "
+          f"{n_params/1e6:.1f}M params")
+
+    opt = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                      weight_decay=0.01)
+    tc = TrainConfig(grad_accum=1, checkpoint_every=100, log_every=20)
+    data = SyntheticData(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch)
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    state = init_state(jax.random.PRNGKey(0), cfg, opt, tc)
+    if ckpt.latest_step():
+        s, state = ckpt.restore(state)
+        print(f"[example] resumed from step {s}")
+    step = jax.jit(make_train_step(cfg, opt, tc), donate_argnums=(0,))
+    state, hist = train_loop(state, step, data, args.steps, ckpt=ckpt,
+                             train_cfg=tc)
+    print(f"[example] loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+          f"over {len(hist['loss'])} steps")
+
+
+if __name__ == "__main__":
+    main()

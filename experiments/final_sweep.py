@@ -1,0 +1,59 @@
+"""Final sweep: optimized code (post-§Perf A0 + SSM memory fixes), every
+(arch x shape) cell.  Single-pod with full cost probes; multi-pod
+memory/compile-only (the roofline table is single-pod per the task spec).
+
+  PYTHONPATH=src python experiments/final_sweep.py [--multi-pod-only]
+"""
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.configs import ARCHS, SHAPES, shape_applicable  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "dryrun")
+
+# fastest-first so a timeout loses the least; jamba train probes take ~30
+# min on this 1-core container — memory/compile-only there (its cost row
+# carries over from the baseline artifact, noted in EXPERIMENTS.md)
+SKIP_PROBES = {("jamba-1.5-large-398b", "train_4k")}
+
+
+def cells():
+    order = []
+    for shape in ("long_500k", "decode_32k", "prefill_32k", "train_4k"):
+        for arch in ARCHS:
+            if shape_applicable(arch, shape):
+                order.append((arch, shape))
+    return order
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod-only", action="store_true")
+    args = ap.parse_args()
+    failures = []
+    todo = cells()
+    if not args.multi_pod_only:
+        for arch, shape in todo:
+            try:
+                run_cell(arch, shape, False, "off", OUT, verbose=False,
+                         skip_probes=(arch, shape) in SKIP_PROBES)
+            except Exception as e:
+                failures.append(("1pod", arch, shape, repr(e)))
+                traceback.print_exc()
+    for arch, shape in todo:
+        try:
+            run_cell(arch, shape, True, "off", OUT, verbose=False,
+                     skip_probes=True)
+        except Exception as e:
+            failures.append(("2pod", arch, shape, repr(e)))
+            traceback.print_exc()
+    print("FAILURES:", failures if failures else "none")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""§Perf hillclimb driver: runs the hypothesis->change->measure iterations
+for the three chosen cells and prints before/after tables.
+
+  PYTHONPATH=src python experiments/perf_hillclimb.py [--cell A|B|C|all]
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+OUT = os.path.join(os.path.dirname(__file__), "perf")
+
+
+def show(r, label):
+    rl = r["roofline"]
+    print(f"  [{label:28s}] comp={rl['t_compute_s']:8.2f}s "
+          f"mem={rl['t_memory_s']*1e3:8.1f}ms coll={rl['t_collective_s']:8.2f}s "
+          f"dom={rl['dominant']:10s} useful={rl.get('useful_ratio', 0):.2f} "
+          f"roofline={rl.get('roofline_fraction', 0)*100:5.1f}% "
+          f"peak={r['per_device']['peak_bytes']/2**30:6.2f}GiB")
+    return rl
+
+
+def cell_A():
+    """deepseek-67b train_4k — most collective-bound baseline."""
+    print("== Cell A: deepseek-67b train_4k ==")
+    # A0 (attention carrier layout fix) is already in the code; the recorded
+    # baseline artifact predates it — rerun captures A0's effect.
+    r = run_cell("deepseek-67b", "train_4k", False, "off", OUT, verbose=False,
+                 tag="A0-attn-layout")
+    show(r, "A0 attn head-merged layout")
+    r = run_cell("deepseek-67b", "train_4k", False, "off", OUT, verbose=False,
+                 tag="A1-no-sp", seq_shard_residual=False)
+    show(r, "A1 +no seq-parallel resid")
+    r = run_cell("deepseek-67b", "train_4k", False, "off", OUT, verbose=False,
+                 tag="A2-dots", remat_policy="dots")
+    show(r, "A2 +dots remat policy")
+    r = run_cell("deepseek-67b", "train_4k", False, "off", OUT, verbose=False,
+                 tag="A3-both", seq_shard_residual=False, remat_policy="dots")
+    show(r, "A3 A1+A2 combined")
+    # A3's peak blows the 16 GiB budget (dots saves per-microbatch matmul
+    # outputs); halving the microbatch should roughly halve that while
+    # keeping the collective win
+    import repro.launch.dryrun as dr
+    dr.TRAIN_OVERRIDES = {"grad_accum": 32}
+    try:
+        r = run_cell("deepseek-67b", "train_4k", False, "off", OUT,
+                     verbose=False, tag="A4-both-accum32",
+                     seq_shard_residual=False, remat_policy="dots")
+        show(r, "A4 A3 + grad_accum 32")
+    finally:
+        dr.TRAIN_OVERRIDES = {}
+
+
+def cell_B():
+    """phi3.5-moe train_4k — worst roofline fraction baseline."""
+    print("== Cell B: phi3.5-moe-42b train_4k ==")
+    r = run_cell("phi3.5-moe-42b-a6.6b", "train_4k", False, "off", OUT,
+                 verbose=False, tag="B0-attn-layout")
+    show(r, "B0 attn head-merged layout")
+    r = run_cell("phi3.5-moe-42b-a6.6b", "train_4k", False, "off", OUT,
+                 verbose=False, tag="B1-no-sp", seq_shard_residual=False)
+    show(r, "B1 +no seq-parallel resid")
+    r = run_cell("phi3.5-moe-42b-a6.6b", "train_4k", False, "off", OUT,
+                 verbose=False, tag="B2-cap1", seq_shard_residual=False,
+                 capacity_factor=1.0)
+    show(r, "B2 +capacity factor 1.0")
+    # B3: dots remat — the remat pass otherwise re-runs the whole MoE
+    # dispatch (a third all_to_all round)
+    r = run_cell("phi3.5-moe-42b-a6.6b", "train_4k", False, "off", OUT,
+                 verbose=False, tag="B3-dots", seq_shard_residual=False,
+                 capacity_factor=1.0, remat_policy="dots")
+    show(r, "B3 +dots remat (no re-a2a)")
+
+
+def cell_C():
+    """qwen2-72b decode_32k — the paper-representative cell (weights/cache
+    bandwidth).  Paper-faithful epitome vs beyond-paper folded vs int8 KV."""
+    print("== Cell C: qwen2-72b decode_32k ==")
+    for tag, label, kw in [
+        ("C0-base", "C0 dense re-measure", dict(epitome="off")),
+        ("C1-paper", "C1 epitome paper-faithful", dict(epitome="paper")),
+        ("C2-folded", "C2 epitome folded (ours)", dict(epitome="folded")),
+        ("C3-kv8", "C3 dense + int8 KV cache", dict(epitome="off",
+                                                    kv_cache_bits=8)),
+        ("C4-folded-kv8", "C4 folded + int8 KV", dict(epitome="folded",
+                                                      kv_cache_bits=8)),
+    ]:
+        ep = kw.pop("epitome")
+        r = run_cell("qwen2-72b", "decode_32k", False, ep, OUT,
+                     verbose=False, tag=tag, **kw)
+        show(r, label)
+    # C5: weights replicated over 'data' for serving (no optimizer state)
+    import repro.launch.dryrun as dr
+    dr.SERVE_WEIGHTS_REPLICATED = True
+    try:
+        r = run_cell("qwen2-72b", "decode_32k", False, "folded", OUT,
+                     verbose=False, tag="C5-folded-kv8-repl", kv_cache_bits=8)
+        show(r, "C5 C4 + replicated weights")
+    finally:
+        dr.SERVE_WEIGHTS_REPLICATED = False
+
+
+def cell_D():
+    """Bonus: grok-1 decode — MoE decode dispatch vs dense-masked."""
+    print("== Cell D (bonus): grok-1-314b decode_32k MoE ==")
+    r = run_cell("grok-1-314b", "decode_32k", False, "off", OUT,
+                 verbose=False, tag="D0-dense-masked")
+    show(r, "D0 dense-masked decode MoE")
+    r = run_cell("grok-1-314b", "decode_32k", False, "off", OUT,
+                 verbose=False, tag="D1-dispatch", moe_decode_dispatch=True)
+    show(r, "D1 all_to_all dispatch")
+    # D2: slot-major expert storage for serving (no per-step expert gather)
+    import repro.launch.dryrun as dr
+    dr.SERVE_WEIGHTS_REPLICATED = True
+    try:
+        r = run_cell("grok-1-314b", "decode_32k", False, "off", OUT,
+                     verbose=False, tag="D2-slot-major",
+                     moe_decode_dispatch=True, kv_cache_bits=8)
+        show(r, "D2 +slot-major experts+kv8")
+    finally:
+        dr.SERVE_WEIGHTS_REPLICATED = False
+    # D3: experts-only slot-major + bf16 serving params (fits the budget)
+    dr.SERVE_EXPERTS_SLOT_MAJOR = True
+    try:
+        r = run_cell("grok-1-314b", "decode_32k", False, "off", OUT,
+                     verbose=False, tag="D3-experts-slot-bf16",
+                     moe_decode_dispatch=True, kv_cache_bits=8,
+                     param_dtype="bfloat16")
+        show(r, "D3 slot experts+bf16+kv8")
+    finally:
+        dr.SERVE_EXPERTS_SLOT_MAJOR = False
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    cells = {"A": cell_A, "B": cell_B, "C": cell_C, "D": cell_D}
+    for name, fn in cells.items():
+        if args.cell in ("all", name):
+            fn()

@@ -1,0 +1,10 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id, **overrides)`` returns the full published config;
+``get_smoke_config(arch_id)`` returns a reduced same-family config for CPU
+tests.  ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for
+every model input of a named input-shape cell (no allocation).
+"""
+from .registry import (
+    ARCHS, SHAPES, get_config, get_smoke_config, input_specs, shape_applicable,
+)

@@ -1,0 +1,114 @@
+"""Registry + input-shape cells (ShapeDtypeStruct stand-ins, no allocation)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import EpitomeSettings, ModelConfig
+from .archs import BUILDERS, LONG_CONTEXT_OK
+
+ARCHS = tuple(BUILDERS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def epitome_settings(variant: str) -> EpitomeSettings:
+    """Named epitome variants used across the experiments:
+    off          — dense baseline
+    paper        — paper-faithful: reconstruct W from the epitome (storage
+                   compression only, like PIM crossbar area)
+    wrapped      — + output channel wrapping (§5.3)
+    folded       — beyond-paper epitome-space matmul (FLOPs and bytes / CR)
+    folded-q3    — folded + 3-bit epitome-aware fake quant (headline row)
+    """
+    return {
+        "off": EpitomeSettings(enabled=False),
+        "paper": EpitomeSettings(enabled=True, mode="reconstruct"),
+        "wrapped": EpitomeSettings(enabled=True, mode="wrapped"),
+        "folded": EpitomeSettings(enabled=True, mode="folded"),
+        "folded-q3": EpitomeSettings(enabled=True, mode="folded", quant_bits=3),
+    }[variant]
+
+
+def get_config(arch: str, epitome: str = "off", **overrides) -> ModelConfig:
+    cfg = BUILDERS[arch](epitome_settings(epitome))
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str, epitome: str = "off") -> ModelConfig:
+    """Reduced same-family config: one super-block repeat, narrow dims."""
+    full = get_config(arch, epitome)
+    ep = epitome_settings(epitome)
+    if ep.enabled:   # small dims still exercised via a small min_params
+        ep = dataclasses.replace(ep, min_params=0, target_cr=2.0, patch=(32, 32))
+    return dataclasses.replace(
+        full,
+        n_layers=2 * len(full.pattern),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(full.n_kv_heads, 2),
+        head_dim=16 if full.head_dim else 0,
+        d_ff=96,
+        vocab=192,
+        n_experts=min(full.n_experts, 4) if full.n_experts else 0,
+        window=8,
+        rwkv_lora_decay=8, rwkv_lora_mix=4,
+        mamba_d_state=4, mamba_d_conv=4, mamba_expand=2,
+        epitome=ep,
+    )
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    """long_500k only for sub-quadratic archs (skip noted in DESIGN.md §6)."""
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell | str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of a cell.
+
+    train:   {tokens|embeds, labels, mask}
+    prefill: {tokens|embeds}
+    decode:  {token, pos}        (the state is built by the launcher)
+    """
+    cell = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = cell.global_batch, cell.seq_len
+    f = jax.ShapeDtypeStruct
+    if cell.kind == "train":
+        batch: Dict[str, Any] = {
+            "labels": f((B, S), jnp.int32),
+            "mask": f((B, S), jnp.float32),
+        }
+        if cfg.embed_inputs:
+            batch["embeds"] = f((B, S, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = f((B, S), jnp.int32)
+        else:
+            batch["tokens"] = f((B, S), jnp.int32)
+        return batch
+    if cell.kind == "prefill":
+        if cfg.embed_inputs:
+            return {"inputs": f((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"inputs": f((B, S), jnp.int32)}
+    # decode: one new token against a cache of length S
+    return {"token": f((B, 1), jnp.int32),
+            "pos": f((), jnp.int32)}

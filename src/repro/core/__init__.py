@@ -1,0 +1,19 @@
+"""The paper's primary contribution: the epitome compact operator and its
+epitome-aware quantization, as composable JAX modules.
+
+epitome.py — EpitomeSpec (sampler geometry, Eq. 1), reconstruction, output
+             channel wrapping (§5.3), the epitome-space folded matmul
+             (beyond-paper: FLOPs and HBM bytes / CR), overlap statistics
+             (Fig. 2c), dense->epitome conversion (the "epitome designer").
+quant.py   — per-crossbar scales + overlap-weighted ranges (§4.2, Eqs. 2-5),
+             STE fake-quant for QAT retraining (§7.1).
+layers.py  — EpLinear / EpConv with four execution modes
+             (reconstruct | wrapped | folded | Pallas kernel).
+"""
+from .epitome import (
+    EpitomeSpec, plan_epitome, init_epitome, epitomize_dense, reconstruct,
+    epitome_matmul_ref, wrapped_matmul, folded_matmul, overlap_counts,
+    overlap_mask,
+)
+from .quant import QuantConfig, quantize_epitome, dequantize_epitome, fake_quant
+from .layers import EpLayerConfig, init_linear, apply_linear, init_conv, apply_conv

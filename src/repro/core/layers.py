@@ -1,0 +1,147 @@
+"""Epitome-backed layers (EpLinear / EpConv) and their dense twins.
+
+Functional style: ``init_*`` returns a param pytree, ``apply_*`` consumes it.
+The EpitomeSpec is *static* configuration (it defines trace-time index maps —
+the TPU analogue of IFAT/IFRT/OFAT), never part of the pytree.
+
+Execution modes for an epitomized weight, in increasing optimization order:
+  'reconstruct' — materialize W then matmul (paper-faithful baseline; the
+                  epitome only saves *storage*, like PIM crossbar area).
+  'wrapped'     — channel wrapping (§5.3): compute unique output-column
+                  blocks only, expand with a static gather (saves FLOPs and
+                  output-buffer writes — the paper's optimization).
+  'kernel'      — Pallas epitome_matmul: never materializes W in HBM; the
+                  epitome stays VMEM-resident across all virtual tiles
+                  (beyond-paper TPU optimization; see kernels/epitome_matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .epitome import (
+    EpitomeSpec,
+    epitome_matmul_ref,
+    folded_matmul,
+    init_epitome,
+    reconstruct,
+    wrapped_matmul,
+)
+from .quant import QuantConfig, fake_quant
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EpLayerConfig:
+    """Static config attached to each (potentially) epitomized layer."""
+    spec: Optional[EpitomeSpec] = None       # None -> dense layer
+    mode: str = "wrapped"                    # reconstruct | wrapped | kernel
+    quant: Optional[QuantConfig] = None      # None -> fp weights
+
+    @property
+    def is_epitome(self) -> bool:
+        return self.spec is not None
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+def init_linear(key: Array, M: int, N: int, cfg: EpLayerConfig,
+                *, bias: bool = False, dtype=jnp.float32) -> dict:
+    p = {}
+    if cfg.is_epitome:
+        p["E"] = init_epitome(key, cfg.spec, dtype=dtype)
+    else:
+        p["W"] = (jax.random.normal(key, (M, N)) / np.sqrt(M)).astype(dtype)
+    if bias:
+        p["b"] = jnp.zeros((N,), dtype)
+    return p
+
+
+def effective_weight(params: dict, cfg: EpLayerConfig) -> Array:
+    """The (possibly fake-quantized) weight a layer multiplies by.
+
+    Only used by 'reconstruct' mode and by tests; 'wrapped'/'kernel' modes
+    never materialize the full W."""
+    if cfg.is_epitome:
+        E = params["E"]
+        if cfg.quant is not None:
+            E = fake_quant(E, cfg.spec, cfg.quant)
+        return reconstruct(E, cfg.spec)
+    W = params["W"]
+    if cfg.quant is not None:
+        W = fake_quant(W, None, cfg.quant)
+    return W
+
+
+def apply_linear(params: dict, x: Array, cfg: EpLayerConfig) -> Array:
+    """y = x @ W (+ b), with W possibly epitome-backed and quantized."""
+    if not cfg.is_epitome:
+        W = params["W"]
+        if cfg.quant is not None:
+            W = fake_quant(W, None, cfg.quant)
+        y = x @ W.astype(x.dtype)
+    else:
+        E = params["E"]
+        if cfg.quant is not None:
+            E = fake_quant(E, cfg.spec, cfg.quant)
+        if cfg.mode == "reconstruct":
+            y = epitome_matmul_ref(x, E, cfg.spec)
+        elif cfg.mode == "wrapped":
+            y = wrapped_matmul(x, E, cfg.spec)
+        elif cfg.mode == "folded":
+            y = folded_matmul(x, E, cfg.spec)
+        elif cfg.mode == "kernel":
+            # import here to keep layers importable without pallas
+            from repro.kernels.ops import epitome_matmul
+            y = epitome_matmul(x, E, cfg.spec)
+        else:
+            raise ValueError(f"unknown mode {cfg.mode}")
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def param_count(params: dict) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (NHWC) — for the paper's own ResNet-50/101 evaluation
+# ---------------------------------------------------------------------------
+def init_conv(key: Array, kh: int, kw: int, cin: int, cout: int,
+              cfg: EpLayerConfig, dtype=jnp.float32) -> dict:
+    M = kh * kw * cin
+    if cfg.is_epitome:
+        return {"E": init_epitome(key, cfg.spec, dtype=dtype)}
+    fan = M
+    W = (jax.random.normal(key, (kh, kw, cin, cout)) / np.sqrt(fan)).astype(dtype)
+    return {"W": W}
+
+
+def apply_conv(params: dict, x: Array, kh: int, kw: int, cin: int, cout: int,
+               cfg: EpLayerConfig, *, stride: int = 1, padding: str = "SAME") -> Array:
+    """Conv in crossbar space: the epitome reconstructs the im2col matrix
+    (kh*kw*cin, cout) — exactly the PIM mapping [13] of rows/cols."""
+    if cfg.is_epitome:
+        E = params["E"]
+        if cfg.quant is not None:
+            E = fake_quant(E, cfg.spec, cfg.quant)
+        Wmat = reconstruct(E, cfg.spec)          # (kh*kw*cin, cout)
+        W = Wmat.reshape(kh, kw, cin, cout)
+    else:
+        W = params["W"]
+        if cfg.quant is not None:
+            Wm = fake_quant(W.reshape(-1, cout), None, cfg.quant)
+            W = Wm.reshape(kh, kw, cin, cout)
+    return jax.lax.conv_general_dilated(
+        x, W.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

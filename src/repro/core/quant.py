@@ -1,0 +1,211 @@
+"""Epitome-aware quantization (EPIM §4.2, Eqs. 2-5, Table 2).
+
+Three ingredients, reproduced faithfully and composable:
+
+1. *naive*      — one (alpha, beta) = (min, max) range for the whole tensor.
+2. *+crossbar*  — one scaling factor per crossbar-sized tile (the paper: PIM
+                  crossbars compute in parallel, so per-crossbar scales cost
+                  nothing; TPU analogue: per-128/256-tile scales, dequantized
+                  inside the matmul kernel).
+3. *+overlap*   — the range is a weighted sum of the min/max over the
+                  high-repetition ("overlap", green) region and the rest
+                  (Eq. 4-5): alpha = w1*min_ovl + w2*min_other, etc.
+
+Asymmetric affine quantization per Eq. 2-3:
+    Q(r) = round(r / S) - Z,   S = (beta - alpha) / (2^k - 1)
+
+Fake-quant (QAT) uses a straight-through estimator so epitomes can be
+trained under quantization, matching the paper's retraining of quantized
+models (§7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .epitome import EpitomeSpec, overlap_mask
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    per_crossbar: bool = True        # paper's "+ Adjust with Crossbars"
+    overlap_weighted: bool = True    # paper's "+ Adjusted with Overlap"
+    w1: float = 0.7                  # weight of the overlap (center) region
+    w2: float = 0.3                  # weight of the rest  (w1 + w2 = 1)
+    tile: int = 256                  # crossbar size (PIM) / scale-tile (TPU)
+    symmetric: bool = False
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+
+# ---------------------------------------------------------------------------
+# Range selection
+# ---------------------------------------------------------------------------
+def _masked_min_max(x: Array, mask: Array) -> Tuple[Array, Array]:
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    mn = jnp.min(jnp.where(mask, x, big))
+    mx = jnp.max(jnp.where(mask, x, -big))
+    return mn, mx
+
+
+def overlap_weighted_range(E: Array, spec: EpitomeSpec, w1: float, w2: float) -> Tuple[Array, Array]:
+    """Eq. 4-5: weighted min/max over the overlap region vs. the rest."""
+    m = jnp.asarray(overlap_mask(spec))
+    any_ovl = m.any()
+    mn_o, mx_o = _masked_min_max(E, m)
+    mn_r, mx_r = _masked_min_max(E, ~m)
+    # degenerate cases: everything (or nothing) is overlap -> plain min/max
+    mn_o = jnp.where(any_ovl, mn_o, mn_r)
+    mx_o = jnp.where(any_ovl, mx_o, mx_r)
+    all_ovl = m.all()
+    mn_r = jnp.where(all_ovl, mn_o, mn_r)
+    mx_r = jnp.where(all_ovl, mx_o, mx_r)
+    alpha = w1 * mn_o + w2 * mn_r
+    beta = w1 * mx_o + w2 * mx_r
+    return alpha, beta
+
+
+def tensor_range(x: Array) -> Tuple[Array, Array]:
+    return jnp.min(x), jnp.max(x)
+
+
+# ---------------------------------------------------------------------------
+# Affine quantize / dequantize (Eq. 2-3)
+# ---------------------------------------------------------------------------
+def scale_zero(alpha: Array, beta: Array, cfg: QuantConfig) -> Tuple[Array, Array]:
+    if cfg.symmetric:
+        amax = jnp.maximum(jnp.abs(alpha), jnp.abs(beta))
+        S = (2 * amax) / cfg.levels
+        Z = jnp.zeros_like(S)
+    else:
+        S = (beta - alpha) / cfg.levels
+        Z = jnp.round(alpha / jnp.maximum(S, 1e-12))
+    S = jnp.maximum(S, 1e-12)
+    return S, Z
+
+
+def quantize(x: Array, S: Array, Z: Array, cfg: QuantConfig) -> Array:
+    q = jnp.round(x / S) - Z
+    lo = -(1 << (cfg.bits - 1)) if cfg.symmetric else 0
+    hi = lo + cfg.levels
+    return jnp.clip(q, lo, hi)
+
+
+def dequantize(q: Array, S: Array, Z: Array) -> Array:
+    return (q + Z) * S
+
+
+# ---------------------------------------------------------------------------
+# Per-crossbar tiling
+# ---------------------------------------------------------------------------
+def _tile_reduce(x: Array, tile: int, fn) -> Array:
+    """Reduce (m, n) -> (gm, gn) per (tile x tile) block, ragged edges ok."""
+    m, n = x.shape
+    gm, gn = -(-m // tile), -(-n // tile)
+    pm, pn = gm * tile - m, gn * tile - n
+    pad_val = x.reshape(-1)[0]
+    xp = jnp.pad(x, ((0, pm), (0, pn)), constant_values=0.0)
+    # make padding neutral by replicating edge values
+    if pm or pn:
+        xp = jnp.pad(x, ((0, pm), (0, pn)), mode="edge")
+    blocks = xp.reshape(gm, tile, gn, tile).transpose(0, 2, 1, 3)
+    return fn(blocks, axis=(2, 3))
+
+
+def per_crossbar_range(E: Array, cfg: QuantConfig) -> Tuple[Array, Array]:
+    """(alpha, beta) per crossbar tile, shape (gm, gn)."""
+    mn = _tile_reduce(E, cfg.tile, jnp.min)
+    mx = _tile_reduce(E, cfg.tile, jnp.max)
+    return mn, mx
+
+
+def _expand_tiles(t: Array, shape: Tuple[int, int], tile: int) -> Array:
+    m, n = shape
+    return jnp.repeat(jnp.repeat(t, tile, 0), tile, 1)[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# The full epitome-aware quantizer
+# ---------------------------------------------------------------------------
+def epitome_ranges(E: Array, spec: Optional[EpitomeSpec], cfg: QuantConfig) -> Tuple[Array, Array]:
+    """Produce (alpha, beta) maps of E.shape combining both paper tricks."""
+    if cfg.overlap_weighted and spec is not None:
+        a_g, b_g = overlap_weighted_range(E, spec, cfg.w1, cfg.w2)
+    else:
+        a_g, b_g = tensor_range(E)
+
+    if cfg.per_crossbar:
+        a_t, b_t = per_crossbar_range(E, cfg)
+        if cfg.overlap_weighted and spec is not None:
+            # blend: per-crossbar range, softly clipped toward the
+            # overlap-weighted global range (the global range acts as the
+            # outlier-robust envelope; per-tile adapts locally).
+            a_t = jnp.maximum(a_t, a_g)   # alpha_g <= 0 <= beta_g typically
+            b_t = jnp.minimum(b_t, b_g)
+            # never allow an inverted range
+            bad = a_t >= b_t
+            a_t = jnp.where(bad, _bcast(a_g, a_t), a_t)
+            b_t = jnp.where(bad, _bcast(b_g, b_t), b_t)
+        alpha = _expand_tiles(a_t, E.shape, cfg.tile)
+        beta = _expand_tiles(b_t, E.shape, cfg.tile)
+    else:
+        alpha = jnp.broadcast_to(a_g, E.shape)
+        beta = jnp.broadcast_to(b_g, E.shape)
+    return alpha, beta
+
+
+def _bcast(g, t):
+    return jnp.broadcast_to(g, t.shape)
+
+
+def quantize_epitome(E: Array, spec: Optional[EpitomeSpec], cfg: QuantConfig
+                     ) -> Tuple[Array, Array, Array]:
+    """Returns (q_int, S, Z) where S/Z have E's shape (expanded tiles)."""
+    alpha, beta = epitome_ranges(E, spec, cfg)
+    S, Z = scale_zero(alpha, beta, cfg)
+    q = quantize(E, S, Z, cfg)
+    return q, S, Z
+
+
+def dequantize_epitome(q: Array, S: Array, Z: Array) -> Array:
+    return dequantize(q, S, Z)
+
+
+# ---------------------------------------------------------------------------
+# Fake quant with straight-through estimator (for QAT retraining, §7.1)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def _ste(x: Array, y: Array) -> Array:
+    return y
+
+
+def _ste_fwd(x, y):
+    return y, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(E: Array, spec: Optional[EpitomeSpec], cfg: QuantConfig) -> Array:
+    q, S, Z = quantize_epitome(E, spec, cfg)
+    return _ste(E, dequantize(q, S, Z).astype(E.dtype))
+
+
+def quant_mse(E: Array, spec: Optional[EpitomeSpec], cfg: QuantConfig) -> Array:
+    """Reconstruction MSE of quantize->dequantize — the offline proxy used to
+    validate the Table 2 ordering (naive > +crossbar > +overlap)."""
+    q, S, Z = quantize_epitome(E, spec, cfg)
+    return jnp.mean((dequantize(q, S, Z) - E) ** 2)

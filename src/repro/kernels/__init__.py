@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for EPIM's compute hot-spots.
+
+epitome_matmul — epitome-space blocked matmul: the paper's IFAT/OFAT index
+                 tables become static scalar-prefetch BlockSpec index maps;
+                 the epitome stays VMEM-resident and output-column blocks
+                 are selected by indirection (channel wrapping = repeated
+                 index-map entries, i.e. free reuse).
+wkv6           — chunked data-dependent-decay linear attention (RWKV6) with
+                 the recurrent state carried in VMEM scratch across the
+                 sequential chunk grid dimension.
+quant_matmul   — int8/intN dequant matmul with one scale/zero pair per
+                 crossbar-sized (256x256) weight tile: the paper's
+                 per-crossbar scaling factors executed on the MXU.
+
+Each kernel ships a pure-jnp oracle in ref.py and a jit'd public wrapper in
+ops.py; tests sweep shapes/dtypes in interpret mode against the oracle.
+"""

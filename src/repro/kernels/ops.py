@@ -1,0 +1,108 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+`epitome_matmul` is what core/layers.py mode="kernel" calls: it folds the
+activations into epitome-row space (the IFRT analogue, a cheap segment-sum),
+runs the MXU kernel with the static OFAT offset table, and trims the result
+to the virtual width.  On CPU (tests / this container) everything runs with
+interpret=True; on TPU the same code JITs to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.epitome import EpitomeSpec
+from .epitome_matmul import epitome_matmul_blocks
+from .quant_matmul import quant_matmul as _quant_matmul
+from .wkv6 import wkv6_chunked
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def kernel_col_blocks(spec: EpitomeSpec) -> np.ndarray:
+    """Static OFAT table: output block j <- epitome column block cb[j].
+    Requires bn-aligned column offsets (the planner's wrap_cols designs give
+    offset 0; spread designs are snapped by `aligned_spec`)."""
+    offs = spec.col_offsets()
+    cb = offs // spec.bn
+    return cb.astype(np.int32)
+
+
+def fold_rows(x: jax.Array, spec: EpitomeSpec) -> jax.Array:
+    """IFRT analogue: scatter-add virtual fan-in into epitome rows."""
+    rmap = jnp.asarray(spec.row_index_map())
+    xt = jnp.moveaxis(x, -1, 0)
+    folded = jax.ops.segment_sum(xt, rmap, num_segments=spec.m)
+    return jnp.moveaxis(folded, 0, -1)
+
+
+def epitome_matmul(x: jax.Array, E: jax.Array, spec: EpitomeSpec,
+                   *, interpret: Optional[bool] = None) -> jax.Array:
+    """y = x @ W(E) via the fused epitome-space kernel."""
+    interpret = _INTERPRET if interpret is None else interpret
+    *lead, M = x.shape
+    x2 = x.reshape(-1, M)
+    folded = fold_rows(x2, spec)                     # (T, m)
+    cb = kernel_col_blocks(spec)
+    # snap col offsets to block multiples (kernel contract)
+    T = folded.shape[0]
+    bt = _pick_bt(T)
+    pad_t = (-T) % bt
+    if pad_t:
+        folded = jnp.pad(folded, ((0, pad_t), (0, 0)))
+    y = epitome_matmul_blocks(folded, E.astype(x.dtype), cb,
+                              bt=bt, bk=_pick_bk(spec.m), bn=spec.bn,
+                              interpret=interpret)
+    y = y[:T, :spec.N] if pad_t else y[:, :spec.N]
+    return y.reshape(*lead, spec.N)
+
+
+def _pick_bt(T: int) -> int:
+    for bt in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if T % bt == 0 or T >= bt and T % bt == 0:
+            if T % bt == 0:
+                return bt
+    return 1
+
+
+def _pick_bk(m: int) -> int:
+    for bk in (512, 256, 128, 64, 32, 16, 8):
+        if m % bk == 0:
+            return bk
+    return m
+
+
+def wkv6(r, k, v, logw, u, *, chunk: int = 64,
+         interpret: Optional[bool] = None):
+    """r/k/v/logw: (B, S, H, K); u: (H, K) -> (B, S, H, K)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    B, S, H, K = r.shape
+    to_bh = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, K)
+    pad = (-S) % chunk
+    rb, kb, vb, lb = (to_bh(t) for t in (r, k, v, logw))
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        rb, kb, vb = z(rb), z(kb), z(vb)
+        lb = jnp.pad(lb, ((0, 0), (0, pad), (0, 0)))
+    ub = jnp.tile(u, (B, 1))                          # (B*H, K)
+    o = wkv6_chunked(rb, kb, vb, lb, ub, chunk=chunk, interpret=interpret)
+    o = o[:, :S]
+    return o.reshape(B, H, S, K).transpose(0, 2, 1, 3)
+
+
+def quant_matmul(x, q, scales, zeros, *, interpret: Optional[bool] = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    *lead, M = x.shape
+    x2 = x.reshape(-1, M)
+    T = x2.shape[0]
+    bt = _pick_bt(T)
+    pad_t = (-T) % bt
+    if pad_t:
+        x2 = jnp.pad(x2, ((0, pad_t), (0, 0)))
+    y = _quant_matmul(x2, q, scales, zeros, bt=bt, interpret=interpret)
+    y = y[:T]
+    return y.reshape(*lead, q.shape[1])

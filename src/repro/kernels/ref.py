@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every kernel (the contract the Pallas kernels are
+tested against, shape-for-shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def epitome_matmul_blocks_ref(x_folded: Array, E: Array, col_blocks,
+                              bn: int) -> Array:
+    """y block j = x_folded @ E[:, cb[j]*bn : (cb[j]+1)*bn]."""
+    cols = []
+    for cb in list(jax.device_get(jnp.asarray(col_blocks))):
+        cols.append(x_folded @ E[:, int(cb) * bn:(int(cb) + 1) * bn])
+    return jnp.concatenate(cols, axis=-1).astype(x_folded.dtype)
+
+
+def wkv6_ref(r: Array, k: Array, v: Array, logw: Array, u: Array) -> Array:
+    """Naive recurrence.  r/k/v/logw: (BH, S, K); u: (BH, K)."""
+    BH, S, K = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(state, t):
+        kv = kf[:, t, :, None] * vf[:, t, None, :]         # (BH, K, V)
+        o = jnp.einsum("bk,bkv->bv", rf[:, t], state + uf[:, :, None] * kv)
+        return state * w[:, t, :, None] + kv, o
+
+    state0 = jnp.zeros((BH, K, K), jnp.float32)
+    _, outs = jax.lax.scan(step, state0, jnp.arange(S))
+    return outs.transpose(1, 0, 2).astype(r.dtype)         # (BH, S, K)
+
+
+def quant_matmul_ref(x: Array, q: Array, scales: Array, zeros: Array,
+                     tile: int = 256) -> Array:
+    """x @ ((q + z) * s) with per-(tile x tile) scale/zero."""
+    M, N = q.shape
+    s_full = jnp.repeat(jnp.repeat(scales, tile, 0), tile, 1)[:M, :N]
+    z_full = jnp.repeat(jnp.repeat(zeros, tile, 0), tile, 1)[:M, :N]
+    W = (q.astype(jnp.float32) + z_full) * s_full
+    return (x.astype(jnp.float32) @ W).astype(x.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline analysis,
+runnable train/serve drivers."""

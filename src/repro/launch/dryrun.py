@@ -1,0 +1,439 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape x
+mesh) cell on placeholder devices; record memory/cost analysis + collective
+schedule for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+      --shape train_4k [--multi-pod] [--epitome folded] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--epitome folded]
+
+The two module-level lines above MUST stay the first statements: jax locks
+the device count on first init, and only the dry-run wants 512 host devices.
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, input_specs, shape_applicable
+from ..models import lm
+from ..models.common import clean_spec, set_mesh, BATCH_AXES, TENSOR_AXIS
+from ..models.config import ModelConfig
+from ..train.loop import TrainConfig, make_train_step
+from ..train.optimizer import AdamWConfig, adamw_init
+from .mesh import make_production_mesh
+from .roofline import collective_bytes, roofline_terms
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+def named(mesh, spec, shape=None) -> NamedSharding:
+    """NamedSharding; when `shape` is given, axes that don't divide the
+    corresponding dim are dropped (int8 moment scales, batch-1 decode,
+    GQA head counts below the mesh axis, ...)."""
+    ps = clean_spec(*spec)
+    if shape is not None:
+        fixed = []
+        for i, s in enumerate(ps):
+            if s is None or i >= len(shape):
+                fixed.append(None if i >= len(shape) else s)
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            size = math.prod(mesh.shape[a] for a in axes)
+            fixed.append(s if shape[i] % size == 0 else None)
+        ps = P(*fixed[:len(shape)])
+    return NamedSharding(mesh, ps)
+
+
+def shaped(tree_shape: Any, tree_spec: Any, mesh) -> Any:
+    """ShapeDtypeStructs with shardings attached (no allocation)."""
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=named(mesh, spec, sds.shape))
+    return jax.tree.map(one, tree_shape, tree_spec,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def state_sharding_tree(cfg: ModelConfig, mesh, train_cfg: TrainConfig,
+                        opt_cfg: AdamWConfig):
+    """(abstract state, matching shardings) for the train step.
+
+    Optimizer moments mirror the parameter specs; int8 moments are tuples
+    (q, scale) that both inherit the param's spec (q is shape-preserving,
+    the scale has the same rank with a smaller last dim)."""
+    from ..train.loop import init_state
+    state_shape = jax.eval_shape(
+        partial(init_state, cfg=cfg, opt_cfg=opt_cfg, train_cfg=train_cfg),
+        jax.random.PRNGKey(0))
+    p_specs = lm.param_specs(cfg, state_shape["params"])
+    is_p = lambda x: isinstance(x, P)
+    if opt_cfg.moments_dtype == "int8":
+        m_specs = jax.tree.map(lambda sp: (sp, sp), p_specs, is_leaf=is_p)
+    else:
+        m_specs = p_specs
+    specs: Dict[str, Any] = {
+        "params": p_specs,
+        "step": P(),
+        "opt": {"step": P(), "m": m_specs, "v": m_specs},
+    }
+    if "master" in state_shape["opt"]:
+        specs["opt"]["master"] = p_specs
+    if "ef_residual" in state_shape:
+        specs["ef_residual"] = p_specs
+    return state_shape, specs
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+TRAIN_OVERRIDES: Dict[str, Any] = {}   # experiment hook (grad_accum etc.)
+
+
+def arch_overrides(arch: str, kind: str) -> Dict[str, Any]:
+    """Per-arch knobs that keep the big models inside 16 GiB/chip."""
+    o: Dict[str, Any] = {}
+    if kind == "train":
+        o["opt"] = AdamWConfig(
+            moments_dtype="int8" if arch in
+            ("grok-1-314b", "jamba-1.5-large-398b", "qwen1.5-110b") else "float32",
+            master_dtype="float32")
+        o["train"] = TrainConfig(
+            grad_accum={
+                "qwen2-72b": 8, "qwen1.5-110b": 8, "deepseek-67b": 8,
+                "grok-1-314b": 8, "jamba-1.5-large-398b": 8,
+                "internvl2-76b": 8, "phi3.5-moe-42b-a6.6b": 4,
+            }.get(arch, 2),
+            accum_dtype="bfloat16" if arch in
+            ("grok-1-314b", "jamba-1.5-large-398b", "qwen1.5-110b")
+            else "float32")
+        if TRAIN_OVERRIDES:
+            import dataclasses as _dc
+            o["train"] = _dc.replace(o["train"], **TRAIN_OVERRIDES)
+    return o
+
+
+def lower_train(cfg: ModelConfig, arch: str, cell, mesh):
+    ov = arch_overrides(arch, "train")
+    opt_cfg, train_cfg = ov["opt"], ov["train"]
+    state_shape, specs = state_sharding_tree(cfg, mesh, train_cfg, opt_cfg)
+    state_in = shaped(state_shape, specs, mesh)
+    batch_shape = input_specs(cfg, cell)
+    bspec = {k: P(BATCH_AXES, *([None] * (len(v.shape) - 1)))
+             for k, v in batch_shape.items()}
+    batch_in = shaped(batch_shape, bspec, mesh)
+    step = make_train_step(cfg, opt_cfg, train_cfg)
+    # force output state shardings == input so donation aliases cleanly
+    out_sh = (jax.tree.map(lambda s: s.sharding, state_in,
+                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+              None)
+    return jax.jit(step, donate_argnums=(0,),
+                   out_shardings=out_sh).lower(state_in, batch_in)
+
+
+def lower_prefill(cfg: ModelConfig, arch: str, cell, mesh):
+    pshape = jax.eval_shape(partial(lm.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = lm.param_specs(cfg, pshape)
+    params_in = shaped(pshape, pspecs, mesh)
+    ishape = input_specs(cfg, cell)["inputs"]
+    inputs_in = jax.ShapeDtypeStruct(
+        ishape.shape, ishape.dtype,
+        sharding=named(mesh, (BATCH_AXES,) + (None,) * (len(ishape.shape) - 1),
+                       ishape.shape))
+    B, S = ishape.shape[0], ishape.shape[1]
+
+    def serve_prefill(params, inputs):
+        state = lm.init_decode_state(cfg, B, S)
+        sspecs = lm.state_specs(cfg, state, B)
+        state = jax.tree.map(
+            lambda x, sp: jax.lax.with_sharding_constraint(x, named(mesh, tuple(sp))),
+            state, sspecs)
+        return lm.prefill(params, inputs, state, cfg)
+
+    return jax.jit(serve_prefill).lower(params_in, inputs_in)
+
+
+SERVE_EXPERTS_SLOT_MAJOR = False   # §Perf D3: only experts re-laid out
+SERVE_WEIGHTS_REPLICATED = False   # §Perf C5: serving replicates weights
+                                   # over 'data' (no optimizer state to fit)
+                                   # so matmuls need no data-axis all-reduce
+
+
+def _serve_specs(pspecs):
+    """Serving layout: dense weights replicate over 'data' (no optimizer
+    state to co-locate), MoE expert weights move to slot-major layout
+    (experts over 'data') so no per-step expert gather is needed."""
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        sp = tree
+        name = path.rsplit("/", 2)
+        if "/w_gate" in path or "/w_up" in path:
+            return P("data", None, TENSOR_AXIS) if len(sp) == 3                 else P(None, "data", None, TENSOR_AXIS)
+        if "/w_down" in path and len(sp) >= 3:
+            return P("data", TENSOR_AXIS, None) if len(sp) == 3                 else P(None, "data", TENSOR_AXIS, None)
+        return P(*[None if a == "data" else a for a in sp])
+    return walk(pspecs)
+
+
+def _expert_slot_specs(pspecs):
+    """Slot-major experts only; everything else keeps its training layout."""
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        sp = tree
+        if "/w_gate" in path or "/w_up" in path:
+            if len(sp) == 4:
+                return P(None, "data", None, TENSOR_AXIS)
+        if "/w_down" in path and len(sp) == 4:
+            return P(None, "data", TENSOR_AXIS, None)
+        return sp
+    return walk(pspecs)
+
+
+def lower_decode(cfg: ModelConfig, arch: str, cell, mesh):
+    pshape = jax.eval_shape(partial(lm.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = lm.param_specs(cfg, pshape)
+    if SERVE_WEIGHTS_REPLICATED:
+        pspecs = _serve_specs(pspecs)
+    elif SERVE_EXPERTS_SLOT_MAJOR:
+        pspecs = _expert_slot_specs(pspecs)
+    params_in = shaped(pshape, pspecs, mesh)
+    B, S = cell.global_batch, cell.seq_len
+    sshape = jax.eval_shape(partial(lm.init_decode_state, cfg, B, S))
+    sspecs = lm.state_specs(cfg, sshape, B)
+    sspecs = jax.tree.map(lambda sp: tuple(sp), sspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    state_in = shaped(sshape, sspecs, mesh)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                               sharding=named(mesh, (BATCH_AXES, None), (B, 1)))
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct(
+            (B, 1, cfg.d_model), jnp.bfloat16,
+            sharding=named(mesh, (BATCH_AXES, None, None), (B, 1, cfg.d_model)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=named(mesh, ()))
+
+    def serve_step(params, state, token, pos):
+        return lm.decode_step(params, state, token, pos, cfg)
+
+    return jax.jit(serve_step, donate_argnums=(1,)).lower(
+        params_in, state_in, tok, pos)
+
+
+def _lower_cell(cfg, arch, cell, mesh):
+    if cell.kind == "train":
+        return lower_train(cfg, arch, cell, mesh)
+    if cell.kind == "prefill":
+        return lower_prefill(cfg, arch, cell, mesh)
+    return lower_decode(cfg, arch, cell, mesh)
+
+
+def _probe_cfg(cfg: ModelConfig, cell, groups: int) -> ModelConfig:
+    """Cost-probe config: `groups` super-block repeats; inner chunk scans
+    sized so <= 8 unrolled chunks cover the sequence."""
+    import dataclasses
+    S = cell.seq_len if cell.kind != "decode" else 1
+    return dataclasses.replace(
+        cfg,
+        n_layers=groups * len(cfg.pattern),
+        attn_kv_chunk=max(512, -(-S // 8)),
+        rwkv_chunk=max(64, -(-S // 8)),
+        mamba_chunk=max(128, -(-S // 8)),
+    )
+
+
+def _cost_probe(cfg, arch, cell, mesh, groups: int) -> Dict[str, Any]:
+    """Lower + compile a small-depth probe with ALL loops unrolled, so
+    cost_analysis counts every FLOP/byte/collective exactly once per real
+    occurrence.  Extrapolation over `groups` recovers the full network
+    (XLA counts while bodies once; see EXPERIMENTS.md §Method)."""
+    from ..models import attention as attn_mod, ssm as ssm_mod
+    pc = _probe_cfg(cfg, cell, groups)
+    lm.SCAN_UNROLL = 1_000_000
+    attn_mod.UNROLL_KV = True
+    ssm_mod.UNROLL_CHUNKS = True
+    try:
+        if cell.kind == "train":
+            ov = arch_overrides(arch, "train")
+            import dataclasses as dc
+            ov["train"] = dc.replace(ov["train"], grad_accum=1)
+            state_shape, specs = state_sharding_tree(pc, mesh, ov["train"], ov["opt"])
+            state_in = shaped(state_shape, specs, mesh)
+            batch_shape = input_specs(pc, cell)
+            bspec = {k: P(BATCH_AXES, *([None] * (len(v.shape) - 1)))
+                     for k, v in batch_shape.items()}
+            batch_in = shaped(batch_shape, bspec, mesh)
+            step = make_train_step(pc, ov["opt"], ov["train"])
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state_in, batch_in)
+        else:
+            lowered = _lower_cell(pc, arch, cell, mesh)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": coll}
+    finally:
+        lm.SCAN_UNROLL = 1
+        attn_mod.UNROLL_KV = False
+        ssm_mod.UNROLL_CHUNKS = False
+
+
+def _extrapolate(p1: Dict, p2: Dict, n_groups: int) -> Dict[str, Any]:
+    """Linear-in-depth extrapolation from 1- and 2-group probes."""
+    def lin(a, b):
+        # clamp: compiler noise can make the 2-group probe cheaper per-op
+        return max(a + (n_groups - 1) * (b - a), max(a, 0.0))
+    ops = set(p1["coll"]["bytes_by_op"]) | set(p2["coll"]["bytes_by_op"])
+    by_op = {op: lin(p1["coll"]["bytes_by_op"].get(op, 0.0),
+                     p2["coll"]["bytes_by_op"].get(op, 0.0)) for op in ops}
+    counts = {op: round(lin(p1["coll"]["count_by_op"].get(op, 0),
+                            p2["coll"]["count_by_op"].get(op, 0))) for op in ops}
+    from .roofline import _VOLUME_MULT
+    weighted = sum(_VOLUME_MULT[op] * b for op, b in by_op.items())
+    return {
+        "flops": lin(p1["flops"], p2["flops"]),
+        "bytes": lin(p1["bytes"], p2["bytes"]),
+        "coll": {"bytes_by_op": by_op, "count_by_op": counts,
+                 "raw_bytes": sum(by_op.values()), "weighted_bytes": weighted},
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, epitome: str,
+             out_dir: Optional[str] = None, verbose: bool = True,
+             skip_memory: bool = False, skip_probes: bool = False,
+             tag: str = "", **overrides) -> Dict[str, Any]:
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    cfg = get_config(arch, epitome=epitome, **overrides)
+    n_chips = math.prod(mesh.devices.shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "epitome": epitome,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": n_chips,
+    }
+
+    # 1) memory/compile-sanity lowering: the REAL config (scanned layers,
+    #    production grad accumulation)
+    if not skip_memory:
+        t0 = time.time()
+        compiled = _lower_cell(cfg, arch, cell, mesh).compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        result["compile_s"] = round(t_compile, 1)
+        result["per_device"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes": int(mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              + mem.output_size_in_bytes
+                              - mem.alias_size_in_bytes),
+        }
+        del compiled
+    else:
+        result["per_device"] = {"peak_bytes": -1}
+        mem = None
+
+    # 2) cost probes at 1 and 2 groups, fully unrolled, extrapolated
+    if skip_probes:
+        result["probe_s"] = 0.0
+        result["per_device"].setdefault("flops", -1.0)
+        print(f"[dryrun] {arch} {shape} {result['mesh']} epitome={epitome}: "
+              f"compile {result.get('compile_s', 0):.0f}s, "
+              f"peak/device {result['per_device']['peak_bytes']/2**30:.2f} GiB "
+              f"(memory-only)")
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            tag = f"{arch}_{shape}_{result['mesh']}_{epitome}".replace(".", "_")
+            with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                json.dump(result, f, indent=1)
+        return result
+    t0 = time.time()
+    p1 = _cost_probe(cfg, arch, cell, mesh, 1)
+    p2 = _cost_probe(cfg, arch, cell, mesh, 2)
+    ext = _extrapolate(p1, p2, cfg.n_groups)
+    result["probe_s"] = round(time.time() - t0, 1)
+    result["per_device"]["flops"] = ext["flops"]
+    result["per_device"]["bytes_accessed"] = ext["bytes"]
+    result["collectives"] = ext["coll"]
+    accum = (arch_overrides(arch, "train")["train"].grad_accum
+             if cell.kind == "train" else 1)
+    result["roofline"] = roofline_terms(
+        {"flops": ext["flops"], "bytes accessed": ext["bytes"]},
+        ext["coll"], cfg, cell, n_chips=n_chips, grad_accum=accum)
+    print(f"[dryrun] {arch} {shape} {result['mesh']} epitome={epitome}: "
+          f"compile {result.get('compile_s', 0):.0f}s + probes {result['probe_s']:.0f}s, "
+          f"peak/device {result['per_device']['peak_bytes']/2**30:.2f} GiB, "
+          f"flops/device {result['per_device']['flops']:.3g}")
+    if verbose and mem is not None:
+        print("  memory_analysis:", mem)
+        ck = {k: (f"{v:.3g}" if isinstance(v, float) else v)
+              for k, v in result['roofline'].items()}
+        print("  roofline:", ck)
+    if tag:
+        result["tag"] = tag
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = (f"{arch}_{shape}_{result['mesh']}_{epitome}"
+                 + (f"_{tag}" if tag else "")).replace(".", "_")
+        with open(os.path.join(out_dir, fname + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--epitome", default="off",
+                    choices=["off", "paper", "wrapped", "folded", "folded-q3"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true",
+                    help="memory/compile lowering only (multi-pod sweeps)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from ..configs import ARCHS
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                if shape_applicable(a, s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        try:
+            run_cell(arch, shape, args.multi_pod, args.epitome, args.out,
+                     skip_probes=args.skip_probes)
+        except Exception as e:
+            failures.append((arch, shape, repr(e)))
+            print(f"[dryrun] FAIL {arch} {shape}: {e!r}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} failures:", failures, file=sys.stderr)
+        sys.exit(1)
+    print(f"[dryrun] all {len(cells)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (EXPERIMENTS.md §Roofline):
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / (links x link_bw)
+
+cost_analysis() reports per-device FLOPs/bytes for the SPMD module.
+collective_bytes is parsed from the compiled HLO text: the shaped result of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with per-op volume multipliers for ring algorithms:
+all-reduce moves ~2x its operand (reduce-scatter + all-gather), the others
+~1x.  A 2D/3D torus gives each chip ~4 usable link directions for an
+all-reduce on a 16-ary axis; we charge the whole payload over ICI_BW per
+link x 4 links (a deliberate, stated simplification — the table compares
+configurations under the same rule).  MODEL_FLOPS = 6*N(active)*D tracks
+how much of compiled compute is useful (remat/dispatch overhead shows up
+as a ratio < ~0.75 for training because remat recomputes the forward).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64)"
+    r"\[[0-9,]*\])\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64)\[([0-9,]*)\]")
+
+# effective payload multiplier per op (ring algorithms)
+_VOLUME_MULT = {
+    "all-reduce": 2.0,         # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+ICI_LINKS = 4                  # usable link directions per chip (2D torus)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective in the compiled module.
+
+    Shapes in SPMD modules are per-device, so the sum is per-device traffic."""
+    per_op: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_part, single, op = m.group(1), m.group(2), m.group(3)
+        shape_src = tuple_part if tuple_part else single
+        b = _shape_bytes(shape_src)
+        per_op[op] = per_op.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+    weighted = sum(_VOLUME_MULT[op] * b for op, b in per_op.items())
+    return {
+        "bytes_by_op": per_op,
+        "count_by_op": count,
+        "raw_bytes": sum(per_op.values()),
+        "weighted_bytes": weighted,
+    }
+
+
+def analytic_hbm_bytes(cfg, cell, n_chips: int, grad_accum: int = 1,
+                       minimal: bool = False) -> float:
+    """First-principles HBM traffic per chip per step.
+
+    XLA's `bytes accessed` counts every operand of every (CPU-fused) op —
+    a pessimistic bound that triple-counts what a TPU keeps in registers /
+    VMEM.  This model counts only traffic that MUST hit HBM:
+
+    train:   params bf16 read 3x (fwd + bwd + remat re-read) + gradient
+             write/read + optimizer state read/write (fp32 m,v,master or
+             int8) + remat-boundary activations (save+reload) + fp32 logits
+             (write + softmax read + grad) per microbatch.
+    prefill: params once + boundary activations + KV-cache write.
+    decode:  params once + full KV/state read + tiny token traffic.
+
+    Epitome configs shrink the *parameter* terms by the compression rate
+    (weights are reconstructed from the epitome in VMEM — kernels/ — or in
+    registers for the folded path)."""
+    P = cfg.param_count()                       # total params
+    cr = cfg.epitome.target_cr if cfg.epitome.enabled else 1.0
+    # per-mode weight-traffic multiplier on the compressible fraction:
+    #   off          1       (read W)
+    #   reconstruct  1/cr+2  (read E, write W, read W — the paper-faithful
+    #                         path pays extra traffic, mirroring its PIM
+    #                         activation-round cost)
+    #   wrapped      1/cr+1  (only unique output-column blocks materialize)
+    #   folded       1/cr    (epitome-space matmul: only E hits HBM)
+    mode_mult = {"reconstruct": 1.0 / cr + 2.0, "wrapped": 1.0 / cr + 1.0,
+                 "folded": 1.0 / cr, "kernel": 1.0 / cr}
+    mult = mode_mult.get(cfg.epitome.mode, 1.0) if cfg.epitome.enabled else 1.0
+    if minimal:      # best achievable traffic (for the roofline "ideal")
+        mult = 1.0 / cr if cfg.epitome.enabled else 1.0
+    # embedding/head are never epitomized
+    embed_p = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    P_eff = embed_p + (P - embed_p) * mult
+    B, S = cell.global_batch, cell.seq_len
+    d, V, G = cfg.d_model, cfg.vocab, cfg.n_groups
+    L_per_group = len(cfg.pattern)
+    if cell.kind == "train":
+        micro = max(1, B // grad_accum)
+        # weights: bf16 read fwd+bwd+remat per microbatch; fp32 grad buffers
+        # write+read; optimizer: master rw + moments rw (fp32)
+        param_t = (3 * 2 * P_eff) * grad_accum \
+            + 2 * 4 * P_eff + 2 * 4 * P_eff + 4 * 4 * P_eff
+        # activations: remat-boundary saves+reloads (bf16) + fp32 logits
+        # (write, softmax read, grad) — global traffic, then / n_chips
+        act_t = grad_accum * (
+            2 * 2 * G * L_per_group * micro * S * d
+            + 3 * 4 * micro * S * V)
+        return (param_t + act_t) / n_chips
+    if cell.kind == "prefill":
+        act_t = 2 * 2 * G * L_per_group * B * S * d
+        cache_t = 2 * 2 * cfg.n_kv_heads * cfg.hd * B * S * _n_attn(cfg)
+        return (2 * P_eff + act_t + cache_t) / n_chips
+    # decode: read all weights + full state per token
+    cache_t = _state_bytes(cfg, B, S)
+    return (2 * P_eff + cache_t) / n_chips
+
+
+def _tp(n_chips: int) -> int:
+    return 16   # model axis of the production mesh
+
+
+def _n_attn(cfg) -> int:
+    from ..models.config import LayerKind
+    per = sum(1 for k in cfg.pattern
+              if k in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value))
+    return per * cfg.n_groups
+
+
+def _state_bytes(cfg, B: int, S: int) -> float:
+    from ..models.config import LayerKind
+    kv_bytes = cfg.kv_cache_bits / 8.0
+    if cfg.kv_cache_bits == 8:
+        kv_bytes += 2.0 / cfg.hd          # per-(token, head) fp16 scale
+    total = 0.0
+    for kind in cfg.pattern:
+        if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+            Seff = min(S, cfg.window) if kind == LayerKind.ATTN_LOCAL.value else S
+            total += 2 * kv_bytes * B * Seff * cfg.n_kv_heads * cfg.hd
+        elif kind == LayerKind.MAMBA.value:
+            total += 4 * B * cfg.mamba_d_inner * cfg.mamba_d_state
+        elif kind == LayerKind.RWKV.value:
+            K = cfg.d_model // cfg.n_heads
+            total += 4 * B * cfg.n_heads * K * K
+    return total * cfg.n_groups
+
+
+def model_flops(cfg, cell) -> float:
+    """6*N*D with N = active params (MoE: top-k experts only)."""
+    n_active = cfg.param_count(active_only=True)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch      # decode: one token
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, Any],
+                   cfg, cell, n_chips: Optional[int] = None,
+                   grad_accum: int = 1) -> Dict[str, float]:
+    n_chips = n_chips or 256
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    # two memory estimates: the XLA per-op bound (pessimistic: counts every
+    # intermediate) and the analytic must-hit-HBM model (docstring above);
+    # the dominant/fraction figures use the analytic term, the XLA bound is
+    # recorded alongside
+    t_mem_xla = bytes_dev / HBM_BW
+    t_memory = t_mem_xla
+    if cfg is not None and cell is not None:
+        hbm = analytic_hbm_bytes(cfg, cell, n_chips, grad_accum)
+        t_memory = hbm / HBM_BW
+    t_coll = coll["weighted_bytes"] / (ICI_LINKS * ICI_BW)
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_xla_bound_s": t_mem_xla,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if cfg is not None and cell is not None:
+        mf = model_flops(cfg, cell)
+        total_hlo = flops_dev * n_chips
+        out["model_flops"] = mf
+        out["useful_ratio"] = mf / total_hlo if total_hlo > 0 else 0.0
+        # the roofline "ideal" step time: pure model FLOPs at peak, or the
+        # minimal must-read HBM traffic, whichever binds
+        ideal_c = mf / (n_chips * PEAK_FLOPS_BF16)
+        ideal_m = analytic_hbm_bytes(cfg, cell, n_chips, grad_accum,
+                                     minimal=True) / HBM_BW
+        out["ideal_compute_s"] = ideal_c
+        out["ideal_s"] = max(ideal_c, ideal_m)
+        out["roofline_fraction"] = (out["ideal_s"] / out["bound_s"]
+                                    if out["bound_s"] > 0 else 0.0)
+    return out
+
+
+def format_row(r: Dict[str, Any]) -> str:
+    rl = r["roofline"]
+    return (f"| {r['arch']} | {r['shape']} | {r['epitome']} | {r['mesh']} | "
+            f"{rl['t_compute_s']*1e3:.1f} | {rl['t_memory_s']*1e3:.1f} | "
+            f"{rl['t_collective_s']*1e3:.1f} | {rl['dominant']} | "
+            f"{rl.get('useful_ratio', 0):.2f} | "
+            f"{rl.get('roofline_fraction', 0)*100:.0f}% | "
+            f"{r['per_device']['peak_bytes']/2**30:.1f} |")
+
+
+def main():
+    import argparse, json, os
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = []
+    for name in sorted(os.listdir(args.dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(args.dir, name)) as f:
+                rows.append(json.load(f))
+    print("| arch | shape | epitome | mesh | t_comp ms | t_mem ms | t_coll ms "
+          "| dominant | useful | roofline | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(format_row(r))
+
+
+if __name__ == "__main__":
+    main()

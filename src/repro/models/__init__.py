@@ -1,0 +1,3 @@
+"""Model substrate: LM-family transformers (dense / MoE / SSM / hybrid) and
+the paper's own ResNet benchmark, all pure functional JAX."""
+from .config import ModelConfig, LayerKind

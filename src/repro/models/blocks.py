@@ -1,0 +1,221 @@
+"""Decoder blocks: one "group" = the smallest repeating super-block of a
+model (jamba's attn+7xmamba, gemma2's local/global pair, or a single layer).
+Group params are stacked over repeats; lm.py scans over them."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.layers import apply_linear, init_linear
+from .attention import attention, decode_attention, init_attn
+from .common import act_fn, init_rms_norm, rms_norm, shard, BATCH_AXES, TENSOR_AXIS
+from .config import LayerKind, ModelConfig
+from .moe import init_moe, moe_ffn
+from .ssm import (
+    init_mamba, init_rwkv, init_rwkv_ffn,
+    mamba_mix, rwkv_channel_mix, rwkv_time_mix,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / gelu-MLP)
+# ---------------------------------------------------------------------------
+def init_ffn(key: Array, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    return {
+        "w_gate": init_linear(k1, d, ff, cfg.ep(d, ff), dtype=dt),
+        "w_up": init_linear(k2, d, ff, cfg.ep(d, ff), dtype=dt),
+        "w_down": init_linear(k3, ff, d, cfg.ep(ff, d), dtype=dt),
+    }
+
+
+def ffn(params: dict, x: Array, cfg: ModelConfig) -> Array:
+    d, ff = cfg.d_model, cfg.d_ff
+    act = act_fn(cfg.act)
+    g = apply_linear(params["w_gate"], x, cfg.ep(d, ff))
+    u = apply_linear(params["w_up"], x, cfg.ep(d, ff))
+    h = act(g) * u
+    h = shard(h, BATCH_AXES, None, TENSOR_AXIS)
+    return apply_linear(params["w_down"], h, cfg.ep(ff, d))
+
+
+# ---------------------------------------------------------------------------
+# One group (super-block)
+# ---------------------------------------------------------------------------
+def init_group(key: Array, cfg: ModelConfig) -> Dict[str, Any]:
+    params: Dict[str, Any] = {}
+    keys = jax.random.split(key, len(cfg.full_pattern))
+    for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
+        k_mix, k_ffn = jax.random.split(keys[i])
+        layer: Dict[str, Any] = {"norm1": init_rms_norm(cfg.d_model, cfg.pdtype)}
+        if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+            layer["mixer"] = init_attn(k_mix, cfg)
+        elif kind == LayerKind.MAMBA.value:
+            layer["mixer"] = init_mamba(k_mix, cfg)
+        elif kind == LayerKind.RWKV.value:
+            layer["mixer"] = init_rwkv(k_mix, cfg)
+        else:
+            raise ValueError(kind)
+        if ffn_kind != "none":
+            layer["norm2"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+        if ffn_kind == "dense":
+            layer["ffn"] = init_ffn(k_ffn, cfg)
+        elif ffn_kind == "moe":
+            layer["ffn"] = init_moe(k_ffn, cfg)
+        elif ffn_kind == "rwkv_ffn":
+            layer["ffn"] = init_rwkv_ffn(k_ffn, cfg)
+        params[f"L{i}"] = layer
+    return params
+
+
+def apply_group(params: Dict[str, Any], x: Array, cfg: ModelConfig,
+                positions: Optional[Array] = None) -> Array:
+    """Training / prefill forward through one super-block."""
+    for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
+        layer = params[f"L{i}"]
+        h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+        if kind == LayerKind.ATTN.value:
+            mix = attention(layer["mixer"], h, cfg, local=False, positions=positions)
+        elif kind == LayerKind.ATTN_LOCAL.value:
+            mix = attention(layer["mixer"], h, cfg, local=True, positions=positions)
+        elif kind == LayerKind.MAMBA.value:
+            mix, _ = mamba_mix(layer["mixer"], h, cfg)
+        elif kind == LayerKind.RWKV.value:
+            mix, _ = rwkv_time_mix(layer["mixer"], h, cfg)
+        x = x + mix
+        x = (shard(x, BATCH_AXES, TENSOR_AXIS, None)   # seq-parallel residual
+             if cfg.seq_shard_residual else shard(x, BATCH_AXES, None, None))
+        if ffn_kind == "none":
+            continue
+        h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+        if ffn_kind == "dense":
+            f = ffn(layer["ffn"], h, cfg)
+        elif ffn_kind == "moe":
+            f = moe_ffn(layer["ffn"], h, cfg)
+        elif ffn_kind == "rwkv_ffn":
+            f, _ = rwkv_channel_mix(layer["ffn"], h, cfg)
+        x = x + f
+        x = (shard(x, BATCH_AXES, TENSOR_AXIS, None)
+             if cfg.seq_shard_residual else shard(x, BATCH_AXES, None, None))
+    return x
+
+
+def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
+                  cfg: ModelConfig, positions: Optional[Array] = None
+                  ) -> Tuple[Array, Dict[str, Any]]:
+    """Full-sequence forward that also fills the decode state (KV caches are
+    written into the pre-allocated max_len buffers of ``state``)."""
+    for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
+        layer = params[f"L{i}"]
+        st = state[f"L{i}"]
+        ns = dict(st)
+        h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+        if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+            mix, (k, v) = attention(layer["mixer"], h, cfg,
+                                    local=(kind == LayerKind.ATTN_LOCAL.value),
+                                    positions=positions, return_kv=True)
+            if cfg.kv_cache_bits == 8:
+                from .attention import quantize_kv
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                wr = lambda c, t: jax.lax.dynamic_update_slice_in_dim(
+                    c, t.astype(c.dtype), 0, 1)
+                ns["k"], ns["k_s"] = wr(st["k"], kq), wr(st["k_s"], ks)
+                ns["v"], ns["v_s"] = wr(st["v"], vq), wr(st["v_s"], vs)
+            else:
+                ns["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    st["k"], k.astype(st["k"].dtype), 0, 1)
+                ns["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    st["v"], v.astype(st["v"].dtype), 0, 1)
+        elif kind == LayerKind.MAMBA.value:
+            mix, (conv, hst) = mamba_mix(layer["mixer"], h, cfg,
+                                         state=(st["conv"].astype(h.dtype), st["h"]))
+            ns["conv"], ns["h"] = conv.astype(st["conv"].dtype), hst
+        elif kind == LayerKind.RWKV.value:
+            mix, (xp, s) = rwkv_time_mix(layer["mixer"], h, cfg,
+                                         state=(st["x_prev"].astype(h.dtype), st["s"]))
+            ns["x_prev"], ns["s"] = xp.astype(st["x_prev"].dtype), s
+        x = x + mix
+        if ffn_kind != "none":
+            h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+            if ffn_kind == "dense":
+                f = ffn(layer["ffn"], h, cfg)
+            elif ffn_kind == "moe":
+                f = moe_ffn(layer["ffn"], h, cfg)
+            elif ffn_kind == "rwkv_ffn":
+                f, xp2 = rwkv_channel_mix(layer["ffn"], h, cfg,
+                                          x_prev=st.get("ffn_x_prev", jnp.zeros(
+                                              (x.shape[0], cfg.d_model), x.dtype)).astype(h.dtype))
+                ns["ffn_x_prev"] = xp2.astype(cfg.cdtype)
+            x = x + f
+        state = {**state, f"L{i}": ns}
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token through one group, updating per-layer state
+# ---------------------------------------------------------------------------
+def init_group_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Decode state for ONE group (lm.py stacks over groups via vmap)."""
+    from .attention import CacheSpec, init_kv_cache
+    from .ssm import init_mamba_state, init_rwkv_state
+    state: Dict[str, Any] = {}
+    for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
+        if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+            c = init_kv_cache(cfg, CacheSpec(max_len=max_len, batch=batch), n=1)
+            state[f"L{i}"] = {kk: vv[0] for kk, vv in c.items()}
+        elif kind == LayerKind.MAMBA.value:
+            conv, h = init_mamba_state(cfg, batch, n=1)
+            state[f"L{i}"] = {"conv": conv[0], "h": h[0]}
+        elif kind == LayerKind.RWKV.value:
+            xp, s = init_rwkv_state(cfg, batch, n=1)
+            state[f"L{i}"] = {"x_prev": xp[0], "s": s[0]}
+            if ffn_kind == "rwkv_ffn":
+                state[f"L{i}"]["ffn_x_prev"] = jnp.zeros((batch, cfg.d_model), cfg.cdtype)
+    return state
+
+
+def decode_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
+                 pos: Array, cfg: ModelConfig
+                 ) -> Tuple[Array, Dict[str, Any]]:
+    """x: (B, 1, d).  Returns (x, new_state)."""
+    new_state: Dict[str, Any] = {}
+    for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
+        layer = params[f"L{i}"]
+        st = state[f"L{i}"]
+        ns = dict(st)
+        h = rms_norm(x, layer["norm1"], cfg.norm_eps)
+        if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+            mix, new_cache = decode_attention(
+                layer["mixer"], h, st, pos, cfg,
+                local=(kind == LayerKind.ATTN_LOCAL.value))
+            ns.update(new_cache)
+        elif kind == LayerKind.MAMBA.value:
+            mix, (conv, hst) = mamba_mix(layer["mixer"], h, cfg,
+                                         state=(st["conv"], st["h"]))
+            ns["conv"], ns["h"] = conv, hst
+        elif kind == LayerKind.RWKV.value:
+            mix, (xp, s) = rwkv_time_mix(layer["mixer"], h, cfg,
+                                         state=(st["x_prev"].astype(h.dtype), st["s"]))
+            ns["x_prev"], ns["s"] = xp.astype(cfg.cdtype), s
+        x = x + mix
+        if ffn_kind != "none":
+            h = rms_norm(x, layer["norm2"], cfg.norm_eps)
+            if ffn_kind == "dense":
+                f = ffn(layer["ffn"], h, cfg)
+            elif ffn_kind == "moe":
+                f = moe_ffn(layer["ffn"], h, cfg)
+            elif ffn_kind == "rwkv_ffn":
+                f, xp2 = rwkv_channel_mix(layer["ffn"], h, cfg,
+                                          x_prev=st["ffn_x_prev"].astype(h.dtype))
+                ns["ffn_x_prev"] = xp2.astype(cfg.cdtype)
+            x = x + f
+        new_state[f"L{i}"] = ns
+    return x, new_state

@@ -1,0 +1,183 @@
+"""Unified model configuration covering all assigned architectures.
+
+A model is ``n_layers`` layers; layers cycle through ``pattern`` (the
+smallest repeating "super-block", e.g. jamba's 1-attention-per-8 or gemma2's
+local/global alternation).  Each pattern position names a sequence mixer and
+an FFN kind.  Layer parameters are stacked over super-block repeats and the
+forward pass scans over them (compile-time O(len(pattern)), not O(layers)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..core.epitome import EpitomeSpec, plan_epitome
+from ..core.layers import EpLayerConfig
+from ..core.quant import QuantConfig
+
+
+class LayerKind(str, enum.Enum):
+    ATTN = "attn"                 # global causal attention
+    ATTN_LOCAL = "attn_local"     # sliding-window attention
+    MAMBA = "mamba"
+    RWKV = "rwkv"
+
+
+@dataclasses.dataclass(frozen=True)
+class EpitomeSettings:
+    """How the paper's operator is applied across a model's weights."""
+    enabled: bool = False
+    target_cr: float = 4.0            # weight-matrix compression rate
+    mode: str = "folded"              # reconstruct | wrapped | folded | kernel
+    min_params: int = 1 << 22         # don't epitomize small matrices (4M)
+    patch: Tuple[int, int] = (256, 256)
+    quant_bits: int = 0               # 0 = fp; else epitome-aware fake quant
+    quant_per_crossbar: bool = True
+    quant_overlap_weighted: bool = True
+
+    def layer_config(self, M: int, N: int) -> EpLayerConfig:
+        if not self.enabled or M * N < self.min_params:
+            return EpLayerConfig(spec=None, quant=self._qcfg())
+        spec = plan_epitome(M, N, self.target_cr, patch=self.patch)
+        return EpLayerConfig(spec=spec, mode=self.mode, quant=self._qcfg())
+
+    def _qcfg(self) -> Optional[QuantConfig]:
+        if self.quant_bits <= 0:
+            return None
+        return QuantConfig(bits=self.quant_bits,
+                           per_crossbar=self.quant_per_crossbar,
+                           overlap_weighted=self.quant_overlap_weighted)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+
+    # super-block structure
+    pattern: Tuple[str, ...] = ("attn",)   # LayerKind values, cycled
+    ffn_pattern: Tuple[str, ...] = ("dense",)  # dense | moe | none, cycled
+
+    # attention details
+    qkv_bias: bool = False                 # qwen
+    window: int = 4096                     # sliding window for ATTN_LOCAL
+    rope_theta: float = 10000.0
+    attn_softcap: float = 0.0              # gemma2: 50.0
+    logit_softcap: float = 0.0             # gemma2: 30.0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+    # Mamba (jamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # RWKV6
+    rwkv_lora_decay: int = 64
+    rwkv_lora_mix: int = 32
+
+    # chunking (memory/perf trade-offs; the dry-run cost probes override
+    # these so inner scans can be fully unrolled for FLOP counting)
+    attn_kv_chunk: int = 512
+    rwkv_chunk: int = 64
+    mamba_chunk: int = 128
+
+    # distribution/perf knobs (§Perf hillclimb levers)
+    seq_shard_residual: bool = True    # Megatron-SP residual (False = pure TP)
+    remat_policy: str = "nothing"      # nothing | dots (save matmul outputs)
+    kv_cache_bits: int = 16            # 8 = int8 KV cache w/ per-tile scales
+    moe_decode_dispatch: bool = False  # all_to_all dispatch even at decode
+
+    # misc
+    act: str = "silu"                      # silu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # the paper's operator
+    epitome: EpitomeSettings = EpitomeSettings()
+
+    # modality frontend stub ([audio]/[vlm]): inputs are precomputed
+    # frame/patch embeddings of this dimension instead of token ids
+    embed_inputs: bool = False
+
+    def __post_init__(self):
+        if self.n_layers % len(self.pattern) != 0:
+            raise ValueError(f"{self.name}: n_layers {self.n_layers} not a "
+                             f"multiple of pattern {len(self.pattern)}")
+        if len(self.ffn_pattern) not in (1, len(self.pattern)):
+            raise ValueError(f"{self.name}: ffn_pattern length mismatch")
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def full_pattern(self) -> Tuple[Tuple[str, str], ...]:
+        fp = self.ffn_pattern * (len(self.pattern) // len(self.ffn_pattern)) \
+            if len(self.ffn_pattern) == 1 else self.ffn_pattern
+        return tuple(zip(self.pattern, fp))
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def ep(self, M: int, N: int) -> EpLayerConfig:
+        """EpLayerConfig for a weight of virtual shape (M, N)."""
+        return self.epitome.layer_config(M, N)
+
+    # -- parameter counting (MODEL_FLOPS uses 6*N*D / 6*N_active*D) ----------
+    def param_count(self, active_only: bool = False) -> int:
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        n = self.vocab * d  # embedding
+        if not self.tie_embeddings:
+            n += d * self.vocab
+        for kind, ffn in self.full_pattern:
+            reps = self.n_groups
+            if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+                n += reps * (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                             + self.n_heads * hd * d)
+            elif kind == LayerKind.MAMBA.value:
+                di, ds = self.mamba_d_inner, self.mamba_d_state
+                n += reps * (d * 2 * di + di * self.mamba_d_conv
+                             + di * (ds * 2 + di // 16 + ds) + di * d)
+            elif kind == LayerKind.RWKV.value:
+                n += reps * (4 * d * d + d * self.rwkv_lora_decay * 2
+                             + 5 * d * self.rwkv_lora_mix * 2)
+            if ffn == "moe":
+                e = self.n_experts if not active_only else self.top_k
+                n += reps * (e * 3 * d * ff + d * self.n_experts)
+            elif ffn == "dense":
+                mult = 3 if self.act in ("silu", "gelu") else 2
+                n += reps * (mult * d * ff)
+            if kind == LayerKind.RWKV.value and ffn == "rwkv_ffn":
+                pass
+        return n

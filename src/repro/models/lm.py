@@ -1,0 +1,239 @@
+"""Full language model: init / param specs / train forward / prefill /
+decode, with scan-over-groups (stacked params) and per-group remat."""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .blocks import (
+    apply_group, decode_group, init_group, init_group_state, prefill_group,
+)
+from .common import (
+    BATCH_AXES, TENSOR_AXIS, embed_lookup, init_rms_norm, rms_norm, shard,
+    softcap, unembed,
+)
+from .config import LayerKind, ModelConfig
+
+Array = jax.Array
+
+# Dry-run knob: scan-over-groups unroll factor.  XLA's cost analysis counts
+# a while-loop body ONCE regardless of trip count, so the roofline lowering
+# sets this to n_groups (full unroll) to make FLOP/byte/collective counts
+# reflect the whole network.  Training memory analysis uses the default 1.
+SCAN_UNROLL = 1
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key: Array, cfg: ModelConfig) -> Dict[str, Any]:
+    k_embed, k_groups, k_head = jax.random.split(key, 3)
+    group_keys = jax.random.split(k_groups, cfg.n_groups)
+    groups = jax.vmap(lambda k: init_group(k, cfg))(group_keys)
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model))
+                  / math.sqrt(cfg.d_model)).astype(cfg.pdtype),
+        "groups": groups,
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab))
+                          / math.sqrt(cfg.d_model)).astype(cfg.pdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs (FSDP over 'data', TP over 'model'; DESIGN.md §5)
+# ---------------------------------------------------------------------------
+def _leaf_spec(path: str, shape: Tuple[int, ...]) -> P:
+    """Spec by parameter role.  Fan-in is FSDP-sharded over 'data', fan-out
+    TP-sharded over 'model' (transposed for down/out projections so the
+    large d_ff/heads dim is always on 'model')."""
+    def last(*names):
+        return any(path.endswith(n) for n in names)
+
+    if last("/embed"):
+        return P(TENSOR_AXIS, "data")
+    if last("/head"):
+        return P("data", TENSOR_AXIS)
+    if last("/router"):
+        return P(None, None)
+
+    # rwkv channel-mix lives under /ffn/: wk is (d, ff) fan-out, wv is
+    # (ff, d) fan-in (the mixer's wk/wv are (d, d) fan-out, handled below)
+    if "/ffn/" in path:
+        if last("wk/W", "wk/E", "wr/W", "wr/E"):
+            return P(None, "data", TENSOR_AXIS)
+        if last("wv/W", "wv/E"):
+            return P(None, TENSOR_AXIS, "data")
+
+    # fan-out projections: output dim on 'model', input dim FSDP on 'data'
+    fan_out = ("wq/W", "wk/W", "wv/W", "wg/W", "wr/W", "in_proj/W",
+               "x_proj/W", "dt_proj/W", "w_gate/W", "w_up/W", "w_gate",
+               "w_up", "wq/E", "wk/E", "wv/E", "wg/E", "wr/E", "in_proj/E",
+               "x_proj/E", "dt_proj/E", "w_gate/E", "w_up/E")
+    # fan-in projections: input dim on 'model' (it carries d_ff / heads)
+    fan_in = ("wo/W", "out_proj/W", "w_down/W", "w_down", "wo/E",
+              "out_proj/E", "w_down/E")
+
+    if last(*fan_out):
+        if len(shape) == 4:        # stacked MoE experts (G, E, d, ff)
+            return P(None, None, "data", TENSOR_AXIS)
+        return P(None, "data", TENSOR_AXIS)
+    if last(*fan_in):
+        if len(shape) == 4:
+            return P(None, None, TENSOR_AXIS, "data")
+        return P(None, TENSOR_AXIS, "data")
+    # everything else (norms, biases, mu's, conv, LoRAs, decay, scalars) is
+    # small: replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, params_shape: Dict[str, Any]) -> Dict[str, Any]:
+    """PartitionSpec tree matching the params tree (built from eval_shape)."""
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, tuple):
+            return tuple(walk(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return _leaf_spec(prefix, tree.shape)
+    return walk(params_shape, "")
+
+
+# ---------------------------------------------------------------------------
+# Forward (training)
+# ---------------------------------------------------------------------------
+def forward(params: Dict[str, Any], inputs: Array, cfg: ModelConfig,
+            remat: bool = True) -> Array:
+    """inputs: (B, S) int32 token ids, or (B, S, d) embeddings (modality
+    stub).  Returns logits (B, S, vocab)."""
+    if inputs.ndim == 2:
+        x = embed_lookup(params["embed"], inputs, cfg.cdtype)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    else:
+        x = inputs.astype(cfg.cdtype)
+    x = shard(x, BATCH_AXES, TENSOR_AXIS, None)
+
+    body = partial(apply_group, cfg=cfg)
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    def scan_fn(x, group_params):
+        return body(group_params, x), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["groups"],
+                        unroll=min(SCAN_UNROLL, cfg.n_groups))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = unembed(x, head, cfg.logit_softcap)
+    return shard(logits, BATCH_AXES, None, TENSOR_AXIS)
+
+
+def loss_fn(params: Dict[str, Any], batch: Dict[str, Array],
+            cfg: ModelConfig) -> Array:
+    """Next-token cross entropy.  batch: tokens (B,S) [+ optional embeds]."""
+    inputs = batch.get("embeds", batch["tokens"])
+    logits = forward(params, inputs, cfg)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot_ll = jnp.sum(
+        jnp.where(labels[..., None] == jnp.arange(cfg.vocab)[None, None],
+                  logits, 0.0), axis=-1)
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    nll = (logz - onehot_ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Per-group decode states stacked over groups (leading axis G)."""
+    one = jax.eval_shape(lambda: init_group_state(cfg, batch, max_len))
+    def stack_init(leaf):
+        return jnp.zeros((cfg.n_groups,) + leaf.shape, leaf.dtype)
+    return jax.tree.map(stack_init, one)
+
+
+def state_specs(cfg: ModelConfig, state_shape: Dict[str, Any],
+                batch: int) -> Dict[str, Any]:
+    """KV caches: batch over data when it divides, else sequence over
+    ('data','model') (long-context single-request decode)."""
+    def leaf(path, l):
+        shp = l.shape
+        if (path.endswith("/k") or path.endswith("/v")
+                or path.endswith("/k_s") or path.endswith("/v_s")):
+            # (G, B, Smax, Hkv, hd|1) — sequence sharded over 'model'
+            if batch > 1:
+                return P(None, BATCH_AXES, TENSOR_AXIS, None, None)
+            return P(None, None, ("pod", "data", "model"), None, None)
+        if path.endswith("/s"):            # rwkv state (G,B,H,K,V)
+            return P(None, BATCH_AXES if batch > 1 else None, TENSOR_AXIS, None, None)
+        if path.endswith("/h"):            # mamba state (G,B,di,ds)
+            return P(None, BATCH_AXES if batch > 1 else None, TENSOR_AXIS, None)
+        if path.endswith("/conv"):         # (G,B,dc-1,di)
+            return P(None, BATCH_AXES if batch > 1 else None, None, TENSOR_AXIS)
+        return P(*([None] * len(shp)))
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        return leaf(prefix, tree)
+    return walk(state_shape, "")
+
+
+def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
+            cfg: ModelConfig) -> Tuple[Array, Dict[str, Any]]:
+    """Run the prompt, fill decode state.  Returns (last-token logits, state)."""
+    if inputs.ndim == 2:
+        x = embed_lookup(params["embed"], inputs, cfg.cdtype)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    else:
+        x = inputs.astype(cfg.cdtype)
+
+    def scan_fn(x, gs):
+        group_params, group_state = gs
+        x, new_state = prefill_group(group_params, group_state, x, cfg)
+        return x, new_state
+
+    x, new_states = jax.lax.scan(scan_fn, x, (params["groups"], state),
+                                 unroll=min(SCAN_UNROLL, cfg.n_groups))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params.get("head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = unembed(x, head, cfg.logit_softcap)
+    return logits, new_states
+
+
+def decode_step(params: Dict[str, Any], state: Dict[str, Any], token: Array,
+                pos: Array, cfg: ModelConfig
+                ) -> Tuple[Array, Dict[str, Any]]:
+    """token: (B, 1) int32 (or (B, 1, d) embeddings); pos: scalar int32.
+    Returns (logits (B, 1, vocab), new state)."""
+    if token.ndim == 2:
+        x = embed_lookup(params["embed"], token, cfg.cdtype)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    else:
+        x = token.astype(cfg.cdtype)
+
+    def scan_fn(x, gs):
+        group_params, group_state = gs
+        x, new_state = decode_group(group_params, group_state, x, pos, cfg)
+        return x, new_state
+
+    x, new_states = jax.lax.scan(scan_fn, x, (params["groups"], state),
+                                 unroll=min(SCAN_UNROLL, cfg.n_groups))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = unembed(x, head, cfg.logit_softcap)
+    return logits, new_states

@@ -1,0 +1,119 @@
+"""ResNet-50/101 in JAX — the paper's own benchmark networks.
+
+Layer geometry comes from the same single source of truth the PIM simulator
+uses (`pim.workloads`), so #XB counts, epitome specs and the JAX model can
+never drift apart.  Convolutions are epitomized in crossbar space
+(rows = kh*kw*cin, cols = cout) exactly per the mapping [13].
+
+BatchNorm runs in batch-stats mode (we never do full ImageNet training
+offline; the smoke tests train on synthetic data — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.epitome import EpitomeSpec
+from ..core.layers import EpLayerConfig, apply_conv, init_conv, init_linear, apply_linear
+from ..core.quant import QuantConfig
+from ..pim.workloads import LayerShape, resnet50_layers, resnet101_layers
+
+Array = jax.Array
+
+
+def _ep_cfg(spec: Optional[EpitomeSpec], quant_bits: int, mode: str) -> EpLayerConfig:
+    q = QuantConfig(bits=quant_bits) if quant_bits else None
+    return EpLayerConfig(spec=spec, mode=mode, quant=q)
+
+
+class ResNetModel:
+    """Functional ResNet built from a LayerShape inventory."""
+
+    def __init__(self, layers: Sequence[LayerShape],
+                 specs: Optional[Sequence[Optional[EpitomeSpec]]] = None,
+                 quant_bits: int = 0, mode: str = "reconstruct",
+                 width_scale: float = 1.0, num_classes: int = 0):
+        self.layers = list(layers)
+        self.specs = list(specs) if specs is not None else [None] * len(layers)
+        self.quant_bits = quant_bits
+        self.mode = mode
+        self.num_classes = num_classes or self.layers[-1].cout
+
+    def init(self, key: Array, dtype=jnp.float32) -> Dict[str, Any]:
+        params: Dict[str, Any] = {}
+        keys = jax.random.split(key, len(self.layers))
+        for i, (l, spec) in enumerate(zip(self.layers, self.specs)):
+            cfg = _ep_cfg(spec, self.quant_bits, self.mode)
+            if l.kind == "fc":
+                params[l.name] = init_linear(keys[i], l.rows, l.cols, cfg, dtype=dtype)
+            else:
+                params[l.name] = {
+                    "conv": init_conv(keys[i], l.kh, l.kw, l.cin, l.cout, cfg, dtype),
+                    "bn_g": jnp.ones((l.cout,), dtype),
+                    "bn_b": jnp.zeros((l.cout,), dtype),
+                }
+        return params
+
+    def _conv_bn(self, p, x, l: LayerShape, spec, act=True):
+        cfg = _ep_cfg(spec, self.quant_bits, self.mode)
+        y = apply_conv(p["conv"], x, l.kh, l.kw, l.cin, l.cout, cfg,
+                       stride=l.stride, padding="SAME")
+        mean = y.mean(axis=(0, 1, 2))
+        var = y.var(axis=(0, 1, 2))
+        y = (y - mean) * jax.lax.rsqrt(var + 1e-5) * p["bn_g"] + p["bn_b"]
+        return jax.nn.relu(y) if act else y
+
+    def apply(self, params: Dict[str, Any], x: Array) -> Array:
+        """x: (N, H, W, 3) -> logits (N, num_classes)."""
+        by_name = {l.name: (l, s) for l, s in zip(self.layers, self.specs)}
+        l, s = by_name["conv1"]
+        x = self._conv_bn(params["conv1"], x, l, s)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+        # walk bottleneck blocks in inventory order
+        names = [l.name for l in self.layers if l.name not in ("conv1", "fc")]
+        blocks: List[str] = sorted({n.rsplit(".", 1)[0] for n in names},
+                                   key=lambda b: names.index(b + ".conv1"))
+        for b in blocks:
+            residual = x
+            l1, s1 = by_name[f"{b}.conv1"]
+            l2, s2 = by_name[f"{b}.conv2"]
+            l3, s3 = by_name[f"{b}.conv3"]
+            h = self._conv_bn(params[f"{b}.conv1"], x, l1, s1)
+            h = self._conv_bn(params[f"{b}.conv2"], h, l2, s2)
+            h = self._conv_bn(params[f"{b}.conv3"], h, l3, s3, act=False)
+            if f"{b}.down" in by_name:
+                ld, sd = by_name[f"{b}.down"]
+                residual = self._conv_bn(params[f"{b}.down"], residual, ld, sd, act=False)
+            x = jax.nn.relu(h + residual)
+        x = x.mean(axis=(1, 2))                       # global average pool
+        l, s = by_name["fc"]
+        cfg = _ep_cfg(s, self.quant_bits, self.mode)
+        return apply_linear(params["fc"], x, cfg)
+
+
+def resnet50(specs=None, **kw) -> ResNetModel:
+    return ResNetModel(resnet50_layers(), specs, **kw)
+
+
+def resnet101(specs=None, **kw) -> ResNetModel:
+    return ResNetModel(resnet101_layers(), specs, **kw)
+
+
+def tiny_resnet(specs=None, **kw) -> ResNetModel:
+    """Reduced same-family network for CPU tests: conv1 + 2 bottlenecks."""
+    layers = [
+        LayerShape("conv1", 3, 3, 3, 16, 16, 2),
+        LayerShape("layer1.0.conv1", 1, 1, 16, 16, 16),
+        LayerShape("layer1.0.conv2", 3, 3, 16, 16, 16),
+        LayerShape("layer1.0.conv3", 1, 1, 16, 64, 16),
+        LayerShape("layer1.0.down", 1, 1, 16, 64, 16),
+        LayerShape("layer1.1.conv1", 1, 1, 64, 16, 16),
+        LayerShape("layer1.1.conv2", 3, 3, 16, 16, 16),
+        LayerShape("layer1.1.conv3", 1, 1, 16, 64, 16),
+        LayerShape("fc", 1, 1, 64, 10, 1, kind="fc"),
+    ]
+    return ResNetModel(layers, specs, **kw)

@@ -1,0 +1,11 @@
+"""Behaviour-level PIM (memristor crossbar) simulator — MNSIM-style [13].
+
+Reproduces the paper's evaluation substrate: crossbar mapping / #XB counting
+(xbar.py), latency & energy lookup tables (tables.py), the end-to-end
+simulator with IFAT/IFRT/OFAT + channel-wrapping effects (simulator.py), and
+the Algorithm-1 evolution search (evo.py).
+"""
+from .xbar import MappingConfig, count_crossbars, layer_crossbars
+from .workloads import resnet50_layers, resnet101_layers, LayerShape
+from .simulator import PimSimulator, SimResult
+from .evo import EvoConfig, evolution_search

@@ -1,0 +1,139 @@
+"""Evolution-search-based layer-wise epitome design (EPIM Algorithm 1).
+
+Reward (Eqs. 6-7):   R = m / Latency(E)   or   m / Energy(E)
+with m = 1 iff #Crossbar(E) <= Budget else 0 (infeasible individuals are
+filtered out of {O}_i, exactly as the pseudo code's size filter).
+
+The search space is the cross product of per-layer candidate epitome shapes
+(N^l combinations; the paper's instance has 20,676,608).  Individuals are
+integer vectors indexing each layer's candidate list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.epitome import EpitomeSpec
+from .simulator import PimSimulator, SimResult
+from .workloads import LayerShape
+from .xbar import MappingConfig, count_crossbars
+
+
+@dataclasses.dataclass
+class EvoConfig:
+    population: int = 64
+    iterations: int = 30
+    parents: int = 16
+    mutate_prob: float = 0.15
+    objective: str = "latency"       # latency | energy | edp
+    wrapping: bool = True
+    seed: int = 0
+
+
+def all_layer_uniform_specs(layers: Sequence[LayerShape], m: int, n: int,
+                            cfg: MappingConfig) -> List[Optional[EpitomeSpec]]:
+    """Fig-4 style uniform design: every layer that shrinks gets (m, n)."""
+    out: List[Optional[EpitomeSpec]] = []
+    for l in layers:
+        em, en = min(m, l.rows), min(n, l.cols)
+        if em * en >= l.rows * l.cols:
+            out.append(None)
+            continue
+        bm, bn = min(cfg.xb_rows, em), min(cfg.xb_cols, en)
+        out.append(EpitomeSpec(M=l.rows, N=l.cols, m=em, n=en, bm=bm, bn=bn))
+    return out
+
+
+def candidate_specs(layer: LayerShape, cfg: MappingConfig,
+                    shapes: Sequence[Tuple[int, int]]) -> List[Optional[EpitomeSpec]]:
+    """Per-layer candidate list: dense (None) + every epitome shape that
+    actually shrinks the layer."""
+    cands: List[Optional[EpitomeSpec]] = [None]
+    for (m, n) in shapes:
+        em, en = min(m, layer.rows), min(n, layer.cols)
+        if em * en >= layer.rows * layer.cols:
+            continue
+        bm, bn = min(cfg.xb_rows, em), min(cfg.xb_cols, en)
+        cands.append(EpitomeSpec(M=layer.rows, N=layer.cols, m=em, n=en, bm=bm, bn=bn))
+    return cands
+
+
+def _reward(sim: SimResult, objective: str) -> float:
+    v = {"latency": sim.latency, "energy": sim.energy, "edp": sim.edp}[objective]
+    return 1.0 / v
+
+
+def evolution_search(
+    layers: Sequence[LayerShape],
+    candidates: Sequence[Sequence[Optional[EpitomeSpec]]],
+    simulator: PimSimulator,
+    budget_xbars: int,
+    cfg: EvoConfig = EvoConfig(),
+    weight_bits: Optional[Sequence[Optional[int]]] = None,
+    seeds: Optional[Sequence[Sequence[Optional[EpitomeSpec]]]] = None,
+    act_bits: Optional[int] = None,
+) -> Tuple[List[Optional[EpitomeSpec]], SimResult, List[float]]:
+    """Algorithm 1.  Returns (best specs, its SimResult, best-reward curve).
+
+    ``seeds`` (e.g. the uniform design) are injected into {P}_0 so the
+    search explores around known-feasible points as well as random ones."""
+    rng = np.random.default_rng(cfg.seed)
+    n_layers = len(layers)
+    sizes = np.array([len(c) for c in candidates])
+
+    def specs_of(ind: np.ndarray) -> List[Optional[EpitomeSpec]]:
+        return [candidates[i][g] for i, g in enumerate(ind)]
+
+    def xbars_of(ind: np.ndarray) -> int:
+        return count_crossbars(layers, simulator.mapping, specs_of(ind), weight_bits)
+
+    def evaluate(ind: np.ndarray) -> Tuple[float, SimResult]:
+        sim = simulator.simulate(layers, specs_of(ind), weight_bits,
+                                 wrapping=cfg.wrapping, act_bits=act_bits)
+        m = 1.0 if sim.xbars <= budget_xbars else 0.0          # Eq. 7
+        return m * _reward(sim, cfg.objective), sim             # Eq. 6
+
+    def encode(specs: Sequence[Optional[EpitomeSpec]]) -> np.ndarray:
+        ind = np.zeros(n_layers, dtype=np.int64)
+        for i, s in enumerate(specs):
+            for g, c in enumerate(candidates[i]):
+                if (c is None and s is None) or (
+                        c is not None and s is not None and c.m == s.m and c.n == s.n):
+                    ind[i] = g
+                    break
+        return ind
+
+    # {P}_0.init(): seeds (uniform/known designs) + random individuals
+    pop = [encode(s) for s in (seeds or [])]
+    pop += [rng.integers(0, sizes) for _ in range(cfg.population - len(pop))]
+    best_curve: List[float] = []
+    best_ind, best_r, best_sim = None, -1.0, None
+
+    for _ in range(cfg.iterations):
+        # filter by model size (budget) then evaluate — lines 3-7
+        scored = []
+        for ind in pop:
+            r, sim = evaluate(ind)
+            scored.append((r, ind, sim))
+            if r > best_r:
+                best_r, best_ind, best_sim = r, ind.copy(), sim
+        best_curve.append(best_r)
+        # select good candidates — line 9
+        scored.sort(key=lambda t: -t[0])
+        parents = [ind for _, ind, _ in scored[: cfg.parents]]
+        # mutate parents — lines 10-14
+        nxt: List[np.ndarray] = list(parents)
+        while len(nxt) < cfg.population:
+            parent = parents[rng.integers(len(parents))]
+            child = parent.copy()
+            mask = rng.random(n_layers) < cfg.mutate_prob
+            if not mask.any():
+                mask[rng.integers(n_layers)] = True
+            child[mask] = rng.integers(0, sizes[mask])
+            nxt.append(child)
+        pop = nxt
+
+    assert best_ind is not None, "no feasible individual found; raise budget"
+    return specs_of(best_ind), best_sim, best_curve

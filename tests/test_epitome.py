@@ -1,0 +1,168 @@
+"""Epitome operator: reconstruction, wrapping, folding, overlap stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.epitome import (
+    EpitomeSpec, epitome_matmul_ref, epitomize_dense, folded_matmul,
+    init_epitome, overlap_counts, overlap_mask, plan_epitome, reconstruct,
+    wrapped_matmul,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mk(M=512, N=384, m=256, n=128, bm=64, bn=64):
+    return EpitomeSpec(M=M, N=N, m=m, n=n, bm=bm, bn=bn)
+
+
+class TestSpec:
+    def test_compression_rate(self):
+        s = mk()
+        assert s.compression_rate == (512 * 384) / (256 * 128)
+
+    def test_plan_hits_target(self):
+        for cr in (2.0, 4.0, 8.0):
+            s = plan_epitome(4096, 4096, cr)
+            assert s is not None
+            assert 0.5 * cr <= s.compression_rate <= 2 * cr
+
+    def test_plan_refuses_tiny(self):
+        assert plan_epitome(64, 64, 4.0, patch=(256, 256)) is None
+
+    def test_offsets_cover_epitome(self):
+        s = mk()
+        ro = s.row_offsets()
+        assert ro.min() == 0 and ro.max() == s.m - s.bm
+        co = s.col_offsets()
+        assert co.min() == 0 and co.max() == s.n - s.bn
+
+    def test_index_maps_bounds(self):
+        s = mk()
+        assert s.row_index_map().max() < s.m
+        assert s.col_index_map().max() < s.n
+        assert len(s.row_index_map()) == s.M
+
+    def test_invalid_spec_raises(self):
+        with pytest.raises(ValueError):
+            EpitomeSpec(M=128, N=128, m=256, n=64, bm=64, bn=64)
+        with pytest.raises(ValueError):
+            EpitomeSpec(M=512, N=512, m=128, n=128, bm=256, bn=64)
+
+
+class TestReconstruction:
+    def test_patches_match_sampler(self):
+        """Eq. 1: every patch of W is a contiguous sub-block of E."""
+        s = mk()
+        E = init_epitome(KEY, s)
+        W = np.asarray(reconstruct(E, s))
+        En = np.asarray(E)
+        ro, co = s.row_offsets(), s.col_offsets()
+        for i in range(s.gm):
+            for j in range(s.gn):
+                blk = W[i * s.bm:(i + 1) * s.bm, j * s.bn:(j + 1) * s.bn]
+                ref = En[ro[i]:ro[i] + blk.shape[0], co[j]:co[j] + blk.shape[1]]
+                np.testing.assert_array_equal(blk, ref)
+
+    def test_wrapped_exact(self):
+        s = EpitomeSpec(M=1024, N=512, m=512, n=128, bm=128, bn=128)
+        E = init_epitome(KEY, s)
+        x = jax.random.normal(KEY, (16, s.M))
+        np.testing.assert_allclose(wrapped_matmul(x, E, s),
+                                   epitome_matmul_ref(x, E, s),
+                                   rtol=0, atol=1e-5)
+
+    def test_folded_exact(self):
+        s = mk()
+        E = init_epitome(KEY, s)
+        x = jax.random.normal(KEY, (16, s.M))
+        np.testing.assert_allclose(folded_matmul(x, E, s),
+                                   epitome_matmul_ref(x, E, s),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_folded_grad_matches(self):
+        s = mk()
+        E = init_epitome(KEY, s)
+        x = jax.random.normal(KEY, (8, s.M))
+        g1 = jax.grad(lambda e: (epitome_matmul_ref(x, e, s) ** 2).sum())(E)
+        g2 = jax.grad(lambda e: (folded_matmul(x, e, s) ** 2).sum())(E)
+        np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-2)
+
+    def test_wrap_factor(self):
+        s = EpitomeSpec(M=1024, N=1024, m=256, n=128, bm=128, bn=128)
+        # n == bn: every column block identical -> full wrapping
+        assert s.wrap_factor == s.gn
+
+    def test_epitomize_dense_identity(self):
+        """If the epitome equals the full weight, conversion is lossless."""
+        s = EpitomeSpec(M=128, N=128, m=128, n=128, bm=128, bn=128)
+        W = jax.random.normal(KEY, (128, 128))
+        E = epitomize_dense(W, s)
+        np.testing.assert_allclose(reconstruct(E, s), W, atol=1e-6)
+
+    def test_epitomize_dense_reduces_error_vs_random(self):
+        s = mk()
+        W = jax.random.normal(KEY, (s.M, s.N))
+        E_fit = epitomize_dense(W, s)
+        E_rand = init_epitome(KEY, s)
+        err_fit = float(jnp.mean((reconstruct(E_fit, s) - W) ** 2))
+        err_rand = float(jnp.mean((reconstruct(E_rand, s) - W) ** 2))
+        assert err_fit < err_rand
+
+
+class TestOverlap:
+    def test_counts_cover(self):
+        s = mk()
+        cnt = overlap_counts(s)
+        assert cnt.min() >= 1          # every cell used at least once
+        # total coverage equals the number of virtual cells
+        assert cnt.sum() == s.M * s.N
+
+    def test_counts_match_index_maps(self):
+        s = mk()
+        cnt = overlap_counts(s)
+        rc = np.bincount(s.row_index_map(), minlength=s.m)
+        cc = np.bincount(s.col_index_map(), minlength=s.n)
+        np.testing.assert_array_equal(cnt, rc[:, None] * cc[None, :])
+
+    def test_center_overlaps_more(self):
+        """Paper Fig 2(c): interior cells repeat more than edges."""
+        s = EpitomeSpec(M=1024, N=1024, m=256, n=256, bm=128, bn=128)
+        cnt = overlap_counts(s)
+        assert cnt[s.m // 2, s.n // 2] >= cnt[0, 0]
+        mask = overlap_mask(s)
+        assert mask.any() and not mask.all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    M=st.integers(2, 40).map(lambda k: 32 * k),
+    N=st.integers(2, 40).map(lambda k: 32 * k),
+    cr=st.floats(1.5, 16.0),
+)
+def test_property_plan_and_reconstruct(M, N, cr):
+    """Any planned epitome reconstructs to the exact virtual shape, and the
+    folded matmul agrees with explicit reconstruction."""
+    s = plan_epitome(M, N, cr, patch=(64, 64), align=32)
+    if s is None:
+        return
+    assert s.compression_rate > 1.0
+    E = init_epitome(jax.random.PRNGKey(M * N), s)
+    W = reconstruct(E, s)
+    assert W.shape == (M, N)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, M))
+    np.testing.assert_allclose(folded_matmul(x, E, s), x @ W,
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 8), n=st.integers(2, 8),
+       gm=st.integers(1, 6), gn=st.integers(1, 6))
+def test_property_overlap_counts_positive(m, n, gm, gn):
+    s = EpitomeSpec(M=16 * gm, N=16 * gn, m=16 * m if 16 * m <= 16 * gm else 16 * gm,
+                    n=16 * n if 16 * n <= 16 * gn else 16 * gn, bm=16, bn=16)
+    cnt = overlap_counts(s)
+    assert cnt.min() >= 0
+    assert (cnt > 0).any()

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.epitome import EpitomeSpec, reconstruct
+from repro.kernels import ops
+from repro.kernels.ref import (
+    epitome_matmul_blocks_ref, quant_matmul_ref, wkv6_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+class TestEpitomeMatmul:
+    @pytest.mark.parametrize("M,N,m,n,bm,bn", [
+        (512, 512, 256, 256, 128, 256),     # wrap: all col blocks identical
+        (512, 256, 256, 256, 128, 256),
+        (1024, 1024, 512, 512, 128, 256),   # mixed offsets
+        (256, 768, 128, 256, 128, 256),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_block_oracle(self, M, N, m, n, bm, bn, dtype):
+        spec = EpitomeSpec(M=M, N=N, m=m, n=n, bm=bm, bn=bn)
+        E = jax.random.normal(KEY, (m, n), dtype)
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, M), dtype)
+        y = ops.epitome_matmul(x, E, spec, interpret=True)
+        ref = epitome_matmul_blocks_ref(
+            ops.fold_rows(x, spec), E, ops.kernel_col_blocks(spec), bn)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(ref[:, :N], np.float32),
+            **tol(dtype))
+
+    def test_aligned_case_matches_reconstruction(self):
+        """When col offsets are block-aligned, the kernel equals the exact
+        epitome matmul (x @ W(E))."""
+        spec = EpitomeSpec(M=512, N=512, m=256, n=256, bm=128, bn=256)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, spec.M))
+        y = ops.epitome_matmul(x, E, spec, interpret=True)
+        np.testing.assert_allclose(y, x @ reconstruct(E, spec),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ragged_rows(self):
+        spec = EpitomeSpec(M=640, N=512, m=256, n=256, bm=128, bn=256)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(KEY, (10, spec.M))      # T not block aligned
+        y = ops.epitome_matmul(x, E, spec, interpret=True)
+        assert y.shape == (10, spec.N)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_batched_leading_dims(self):
+        spec = EpitomeSpec(M=256, N=256, m=128, n=256, bm=128, bn=256)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(KEY, (2, 3, spec.M))
+        y = ops.epitome_matmul(x, E, spec, interpret=True)
+        assert y.shape == (2, 3, spec.N)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("B,S,H,K,chunk", [
+        (1, 16, 1, 8, 8),
+        (2, 64, 2, 16, 16),
+        (2, 50, 2, 8, 16),       # ragged sequence vs chunk
+        (1, 128, 4, 32, 64),
+    ])
+    def test_vs_naive(self, B, S, H, K, chunk):
+        ks = jax.random.split(KEY, 5)
+        r = jax.random.normal(ks[0], (B, S, H, K))
+        k = jax.random.normal(ks[1], (B, S, H, K))
+        v = jax.random.normal(ks[2], (B, S, H, K))
+        lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.5)
+        u = jax.random.normal(ks[4], (H, K)) * 0.1
+        o = ops.wkv6(r, k, v, lw, u, chunk=chunk, interpret=True)
+        to_bh = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, K)
+        ref = wkv6_ref(to_bh(r), to_bh(k), to_bh(v), to_bh(lw),
+                       jnp.tile(u, (B, 1)))
+        ref = ref.reshape(B, H, S, K).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(o, ref, rtol=1e-3, atol=1e-3)
+
+    def test_strong_decay_stable(self):
+        """Aggressive decays (log w ~ -20) must not produce inf/nan."""
+        B, S, H, K = 1, 32, 1, 8
+        r = jax.random.normal(KEY, (B, S, H, K))
+        k = jax.random.normal(KEY, (B, S, H, K))
+        v = jax.random.normal(KEY, (B, S, H, K))
+        lw = jnp.full((B, S, H, K), -20.0)
+        u = jnp.zeros((H, K))
+        o = ops.wkv6(r, k, v, lw, u, chunk=16, interpret=True)
+        assert bool(jnp.all(jnp.isfinite(o)))
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("T,M,N", [(8, 256, 256), (32, 512, 768),
+                                       (7, 512, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, T, M, N, dtype):
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.randint(ks[0], (M, N), -127, 128).astype(jnp.int8)
+        s = jax.random.uniform(ks[1], (M // 256, N // 256), minval=1e-3,
+                               maxval=1e-2)
+        z = jnp.round(jax.random.uniform(ks[2], (M // 256, N // 256),
+                                         minval=-3, maxval=3))
+        x = jax.random.normal(ks[3], (T, M), dtype)
+        y = ops.quant_matmul(x, q, s, z, interpret=True)
+        ref = quant_matmul_ref(x, q, s, z)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(ref, np.float32), **tol(dtype))
+
+    def test_matches_epitome_aware_quantizer(self):
+        """End-to-end: quantize an epitome with per-crossbar scales, run the
+        kernel, compare against the dequantized dense matmul."""
+        from repro.core.quant import QuantConfig, quantize_epitome, dequantize
+        spec = EpitomeSpec(M=512, N=512, m=512, n=512, bm=128, bn=256)
+        E = jax.random.normal(KEY, (512, 512))
+        cfg = QuantConfig(bits=8, per_crossbar=True, overlap_weighted=False,
+                          tile=256)
+        qfull, S, Z = quantize_epitome(E, spec, cfg)
+        # shift the unsigned 8-bit codes into int8 range; fold the shift
+        # into the per-tile zero point: (q-128 + (z+128)) * s == (q+z) * s
+        s_t = S[::256, ::256]
+        z_t = Z[::256, ::256] + 128.0
+        q_i8 = (qfull - 128.0).astype(jnp.int8)
+        x = jax.random.normal(KEY, (16, 512))
+        y = ops.quant_matmul(x, q_i8, s_t, z_t, interpret=True)
+        ref = x @ dequantize(qfull, S, Z)
+        np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3)

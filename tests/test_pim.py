@@ -1,0 +1,146 @@
+"""PIM simulator: #XB reproduction of Table 1, calibration, evo search."""
+import numpy as np
+import pytest
+
+from repro.pim import (
+    MappingConfig, PimSimulator, count_crossbars, resnet50_layers,
+    resnet101_layers,
+)
+from repro.pim.evo import (
+    EvoConfig, all_layer_uniform_specs, candidate_specs, evolution_search,
+)
+from repro.pim.simulator import default_calibrated_simulator
+from repro.pim.xbar import uniform_epitome_specs, utilization
+
+CFG = MappingConfig()
+R50 = resnet50_layers()
+R101 = resnet101_layers()
+
+
+class TestCrossbarCounts:
+    """Table 1 #XB arithmetic (within the documented ~2% residuals)."""
+
+    def test_resnet50_dense(self):
+        assert count_crossbars(R50, CFG) == 13184          # paper: 13120
+
+    def test_resnet101_dense(self):
+        assert count_crossbars(R101, CFG) == 22432         # paper: 22912
+
+    def test_resnet50_epitome(self):
+        specs = uniform_epitome_specs(R50, 1024, 256, CFG)
+        assert count_crossbars(R50, CFG, specs) == 5632    # paper: 5696
+
+    def test_resnet101_epitome(self):
+        specs = uniform_epitome_specs(R101, 1024, 256, CFG)
+        assert count_crossbars(R101, CFG, specs) == 10528  # paper: 10592
+
+    def test_compression_rates(self):
+        specs = uniform_epitome_specs(R50, 1024, 256, CFG)
+        cr = count_crossbars(R50, CFG) / count_crossbars(R50, CFG, specs)
+        assert abs(cr - 2.30) < 0.08                        # paper: 2.30
+        specs = uniform_epitome_specs(R101, 1024, 256, CFG)
+        cr = count_crossbars(R101, CFG) / count_crossbars(R101, CFG, specs)
+        assert abs(cr - 2.16) < 0.08                        # paper: 2.16
+
+    def test_quantized_slices(self):
+        """W9/W7/W5 rows: slices = ceil((bits-1)/2)."""
+        specs = uniform_epitome_specs(R50, 1024, 256, CFG)
+        for bits, paper in [(9, 1424), (7, 1076), (5, 720)]:
+            got = count_crossbars(R50, CFG, specs, [bits] * len(R50))
+            assert abs(got - paper) / paper < 0.03, (bits, got, paper)
+
+    def test_w3_headline_compression(self):
+        """The 3-bit row: our slicing gives >= the paper's 30.65x CR."""
+        specs = uniform_epitome_specs(R50, 1024, 256, CFG)
+        dense = count_crossbars(R50, CFG)
+        q3 = count_crossbars(R50, CFG, specs, [3] * len(R50))
+        assert dense / q3 >= 30.0
+
+    def test_utilization_high(self):
+        assert utilization(R50, CFG) > 0.90                 # paper: 94.9%
+
+
+class TestSimulator:
+    def setup_method(self):
+        self.sim = default_calibrated_simulator()
+        self.sp50 = uniform_epitome_specs(R50, 1024, 256, CFG)
+        self.sp101 = uniform_epitome_specs(R101, 1024, 256, CFG)
+
+    def test_calibration_anchors_exact(self):
+        base = self.sim.simulate(R50)
+        ep = self.sim.simulate(R50, self.sp50)
+        assert abs(base.latency - 139.8e-3) < 1e-6
+        assert abs(base.energy - 214.0e-3) < 1e-6
+        assert abs(ep.latency - 167.7e-3) < 1e-6
+        assert abs(ep.energy - 194.8e-3) < 1e-6
+
+    def test_resnet101_unfitted_predictions(self):
+        """The whole ResNet-101 column is predicted, not fitted (±15%)."""
+        base = self.sim.simulate(R101)
+        ep = self.sim.simulate(R101, self.sp101)
+        assert abs(base.latency - 189.7e-3) / 189.7e-3 < 0.15
+        assert abs(base.energy - 385.7e-3) / 385.7e-3 < 0.15
+        assert abs(ep.latency - 263.7e-3) / 263.7e-3 < 0.15
+        assert abs(ep.energy - 364.8e-3) / 364.8e-3 < 0.15
+
+    def test_fig4_energy_anchor(self):
+        base = self.sim.simulate(R50)
+        f = all_layer_uniform_specs(R50, 256, 256, CFG)
+        e256 = self.sim.simulate(R50, f)
+        assert abs(e256.energy / base.energy - 2.13) < 0.02  # fitted anchor
+        assert e256.latency / base.latency > 2.0             # predicted: 3.86x
+
+    def test_wrapping_helps(self):
+        f = all_layer_uniform_specs(R50, 256, 256, CFG)
+        plain = self.sim.simulate(R50, f)
+        wrap = self.sim.simulate(R50, f, wrapping=True)
+        assert wrap.latency < plain.latency
+        assert wrap.energy < plain.energy
+        assert wrap.edp < plain.edp
+
+    def test_quantized_rows_direction(self):
+        """Latency/energy fall monotonically with weight bits (A9)."""
+        lat, en = [], []
+        for bits in (9, 7, 5, 3):
+            r = self.sim.simulate(R50, self.sp50,
+                                  weight_bits=[bits] * len(R50), act_bits=9)
+            lat.append(r.latency)
+            en.append(r.energy)
+        assert lat == sorted(lat, reverse=True)
+        assert en == sorted(en, reverse=True)
+
+    def test_w9a9_latency_ballpark(self):
+        r = self.sim.simulate(R50, self.sp50, weight_bits=[9] * len(R50),
+                              act_bits=9)
+        assert abs(r.latency - 50.9e-3) / 50.9e-3 < 0.25     # paper: 50.9ms
+
+
+class TestEvoSearch:
+    def setup_method(self):
+        self.sim = default_calibrated_simulator()
+        shapes = [(1024, 256), (512, 256), (2048, 256), (256, 256)]
+        self.cands = [candidate_specs(l, CFG, shapes) for l in R50]
+        self.uniform = uniform_epitome_specs(R50, 1024, 256, CFG)
+
+    def test_budget_gate(self):
+        """Eq. 7: individuals above budget are infeasible."""
+        wb = [9] * len(R50)
+        uni = self.sim.simulate(R50, self.uniform, weight_bits=wb, act_bits=9)
+        best, sim, _ = evolution_search(
+            R50, self.cands, self.sim, uni.xbars,
+            EvoConfig(population=16, iterations=5), weight_bits=wb,
+            seeds=[self.uniform], act_bits=9)
+        assert sim.xbars <= uni.xbars
+
+    def test_beats_uniform(self):
+        """Fig. 4: layer-wise design beats the uniform epitome."""
+        wb = [9] * len(R50)
+        uni = self.sim.simulate(R50, self.uniform, weight_bits=wb,
+                                act_bits=9, wrapping=True)
+        best, sim, curve = evolution_search(
+            R50, self.cands, self.sim, uni.xbars,
+            EvoConfig(population=32, iterations=12, objective="latency"),
+            weight_bits=wb, seeds=[self.uniform, [None] * len(R50)],
+            act_bits=9)
+        assert sim.latency <= uni.latency
+        assert curve == sorted(curve)          # monotone best-so-far

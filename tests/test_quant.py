@@ -1,0 +1,100 @@
+"""Epitome-aware quantization: Table-2 ordering, STE, range properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.epitome import EpitomeSpec, init_epitome
+from repro.core.quant import (
+    QuantConfig, dequantize, epitome_ranges, fake_quant, overlap_weighted_range,
+    quant_mse, quantize, quantize_epitome, scale_zero, tensor_range,
+)
+
+KEY = jax.random.PRNGKey(0)
+SPEC = EpitomeSpec(M=1024, N=1024, m=512, n=256, bm=128, bn=128)
+
+
+def heavy_tailed_epitome():
+    """Outliers at low-repetition cells — the regime the paper's
+    overlap-weighted range is designed for."""
+    E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+    E = E.at[0, 0].set(25.0).at[-1, -1].set(-25.0)   # edge outliers
+    return E
+
+
+class TestRanges:
+    def test_tensor_range(self):
+        E = heavy_tailed_epitome()
+        a, b = tensor_range(E)
+        assert float(a) == -25.0 and float(b) == 25.0
+
+    def test_overlap_weighted_tighter(self):
+        E = heavy_tailed_epitome()
+        a, b = overlap_weighted_range(E, SPEC, w1=0.7, w2=0.3)
+        assert float(a) > -25.0 and float(b) < 25.0
+
+    def test_ranges_shapes(self):
+        E = heavy_tailed_epitome()
+        for cfg in (QuantConfig(bits=3, per_crossbar=True),
+                    QuantConfig(bits=3, per_crossbar=False)):
+            a, b = epitome_ranges(E, SPEC, cfg)
+            assert a.shape == E.shape and b.shape == E.shape
+            assert bool(jnp.all(a < b))
+
+
+class TestTable2Ordering:
+    """Naive < +crossbar < +overlap (in accuracy <=> reversed in MSE)."""
+
+    def test_mse_ordering(self):
+        E = heavy_tailed_epitome()
+        naive = quant_mse(E, SPEC, QuantConfig(
+            bits=3, per_crossbar=False, overlap_weighted=False))
+        xbar = quant_mse(E, SPEC, QuantConfig(
+            bits=3, per_crossbar=True, overlap_weighted=False))
+        both = quant_mse(E, SPEC, QuantConfig(
+            bits=3, per_crossbar=True, overlap_weighted=True))
+        assert float(xbar) < float(naive)
+        assert float(both) <= float(xbar) * 1.05   # overlap helps or ties
+
+    def test_more_bits_less_error(self):
+        E = heavy_tailed_epitome()
+        errs = [float(quant_mse(E, SPEC, QuantConfig(bits=b))) for b in (3, 5, 7, 9)]
+        assert errs == sorted(errs, reverse=True)
+
+
+class TestQuantizeDequantize:
+    def test_roundtrip_error_bound(self):
+        E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+        cfg = QuantConfig(bits=8, per_crossbar=False, overlap_weighted=False)
+        q, S, Z = quantize_epitome(E, SPEC, cfg)
+        err = jnp.abs(dequantize(q, S, Z) - E)
+        assert float(err.max()) <= float(S.max())  # within one step
+
+    def test_int_codes(self):
+        E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+        cfg = QuantConfig(bits=3)
+        q, S, Z = quantize_epitome(E, SPEC, cfg)
+        assert float(q.min()) >= 0 and float(q.max()) <= 7
+
+    def test_ste_gradient(self):
+        E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+        cfg = QuantConfig(bits=3)
+        g = jax.grad(lambda e: (fake_quant(e, SPEC, cfg) ** 2).sum())(E)
+        # STE: gradient flows (nonzero) and is finite
+        assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).sum()) > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8), symmetric=st.booleans(),
+       scale=st.floats(0.01, 100.0))
+def test_property_quant_bounded(bits, symmetric, scale):
+    x = jax.random.normal(jax.random.PRNGKey(bits), (64, 64)) * scale
+    cfg = QuantConfig(bits=bits, per_crossbar=False,
+                      overlap_weighted=False, symmetric=symmetric)
+    a, b = tensor_range(x)
+    S, Z = scale_zero(a, b, cfg)
+    q = quantize(x, S, Z, cfg)
+    deq = dequantize(q, S, Z)
+    # error bounded by one quantization step everywhere inside the range
+    assert float(jnp.max(jnp.abs(deq - x))) <= 1.01 * float(S) * (1 + bits)

@@ -1,0 +1,205 @@
+"""Training substrate: optimizer (+int8 moments), checkpointing, data,
+gradient compression, end-to-end smoke training."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import SyntheticData
+from repro.train.loop import (
+    TrainConfig, compress_grads_ef, init_state, make_train_step, train_loop,
+)
+from repro.train.optimizer import (
+    AdamWConfig, _dq8, _q8, adamw_init, adamw_update, global_norm, schedule,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestOptimizer:
+    def test_quadratic_convergence(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=10_000)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params, cfg)
+        for _ in range(200):
+            g = {"w": 2 * params["w"]}
+            params, state, _ = adamw_update(params, g, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_int8_moments_track_fp32(self):
+        k = jax.random.PRNGKey(1)
+        p0 = {"w": jax.random.normal(k, (512,))}
+        outs = {}
+        for dt in ("float32", "int8"):
+            cfg = AdamWConfig(lr=0.01, weight_decay=0.0, warmup_steps=0,
+                              moments_dtype=dt)
+            params, state = dict(p0), adamw_init(p0, cfg)
+            for i in range(20):
+                g = {"w": params["w"] + 0.1 * jax.random.normal(
+                    jax.random.PRNGKey(i), (512,))}
+                params, state, _ = adamw_update(params, g, state, cfg)
+            outs[dt] = params["w"]
+        err = float(jnp.abs(outs["int8"] - outs["float32"]).max())
+        assert err < 0.05, err
+
+    def test_q8_roundtrip(self):
+        x = jax.random.normal(KEY, (3, 700)) * 10
+        q, s = _q8(x)
+        assert q.dtype == jnp.int8 and q.shape == x.shape
+        back = _dq8(q, s, x.shape, x.size)
+        assert float(jnp.abs(back - x).max()) <= float(s.max()) + 1e-6
+
+    def test_schedule_warmup_then_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        lrs = [float(schedule(cfg, jnp.int32(s))) for s in range(0, 100, 5)]
+        assert lrs[0] < lrs[2]                 # warming up
+        assert lrs[-1] < max(lrs)              # decayed
+
+    def test_grad_clip(self):
+        cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+        params = {"w": jnp.zeros((4,))}
+        state = adamw_init(params, cfg)
+        _, _, m = adamw_update(params, {"w": jnp.full((4,), 1e6)}, state, cfg)
+        assert m["grad_norm"] > 1e5            # reported pre-clip
+
+    def test_master_weights_bf16_params(self):
+        params = {"w": jnp.ones((8,), jnp.bfloat16)}
+        cfg = AdamWConfig(lr=0.01)
+        state = adamw_init(params, cfg)
+        assert "master" in state
+        assert state["master"]["w"].dtype == jnp.float32
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 2))}}
+        mgr.save(3, tree, blocking=True)
+        step, back = mgr.restore(tree)
+        assert step == 3
+        np.testing.assert_array_equal(back["a"], tree["a"])
+        np.testing.assert_array_equal(back["b"]["c"], tree["b"]["c"])
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+        tree = {"a": jnp.zeros(3)}
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree, blocking=True)
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                       if n.startswith("step_"))
+        assert steps == [3, 4]
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+        tree = {"a": jnp.zeros(3)}
+        mgr.save(1, tree, blocking=True)
+        # fake a torn write (no DONE marker)
+        os.makedirs(tmp_path / "step_00000009")
+        assert mgr.latest_step() == 1
+
+    def test_async_writes_land(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_write=True)
+        mgr.save(7, {"a": jnp.arange(4)})
+        mgr.wait()
+        assert mgr.latest_step() == 7
+
+
+class TestData:
+    def test_deterministic(self):
+        d = SyntheticData(vocab=100, seq_len=16, global_batch=4, seed=1)
+        b1, b2 = d.batch(5), d.batch(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_differ(self):
+        d = SyntheticData(vocab=100, seq_len=16, global_batch=4)
+        assert not np.array_equal(d.batch(0)["tokens"], d.batch(1)["tokens"])
+
+    def test_labels_shifted(self):
+        d = SyntheticData(vocab=100, seq_len=16, global_batch=2)
+        b = d.batch(0)
+        assert b["labels"].shape == b["tokens"].shape
+
+    def test_host_slicing_partitions(self):
+        d = SyntheticData(vocab=100, seq_len=8, global_batch=8)
+        full = d.batch(0)["tokens"]
+        parts = [d.host_batch(0, h, 4)["tokens"] for h in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+class TestCompression:
+    def test_error_feedback_preserves_signal(self):
+        """Sum of (compressed grad + residual drift) converges to the true
+        gradient sum — the EF guarantee."""
+        g = {"w": jax.random.normal(KEY, (256,))}
+        res = {"w": jnp.zeros((256,))}
+        total_c = jnp.zeros((256,))
+        for i in range(20):
+            gi = {"w": g["w"] * (1 + 0.01 * i)}
+            c, res = compress_grads_ef(gi, res)
+            total_c = total_c + c["w"]
+        total_true = sum(g["w"] * (1 + 0.01 * i) for i in range(20))
+        # residual bounded by one quantization step
+        err = jnp.abs(total_c + res["w"] - total_true)
+        assert float(err.max()) < 1e-3
+
+
+class TestLoop:
+    def test_loss_decreases_smoke(self, tmp_path):
+        cfg = get_smoke_config("gemma2-2b")
+        opt = AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=30,
+                          weight_decay=0.0)
+        tc = TrainConfig(grad_accum=1, checkpoint_every=10, log_every=100)
+        data = SyntheticData(vocab=cfg.vocab, seq_len=32, global_batch=4)
+        state = init_state(KEY, cfg, opt, tc)
+        step = jax.jit(make_train_step(cfg, opt, tc), donate_argnums=(0,))
+        ckpt = CheckpointManager(str(tmp_path), async_write=False)
+        state, hist = train_loop(state, step, data, 25, ckpt=ckpt,
+                                 train_cfg=tc, log=lambda *a: None)
+        assert np.mean(hist["loss"][-5:]) < np.mean(hist["loss"][:5])
+        assert ckpt.latest_step() is not None
+
+    def test_restart_resumes(self, tmp_path):
+        cfg = get_smoke_config("musicgen-large")
+        opt = AdamWConfig(lr=1e-3, total_steps=20)
+        tc = TrainConfig(checkpoint_every=5, log_every=100)
+        data = SyntheticData(vocab=cfg.vocab, seq_len=16, global_batch=2,
+                             embed_dim=cfg.d_model)
+        state = init_state(KEY, cfg, opt, tc)
+        step = jax.jit(make_train_step(cfg, opt, tc), donate_argnums=(0,))
+        ckpt = CheckpointManager(str(tmp_path), async_write=False)
+        state, _ = train_loop(state, step, data, 10, ckpt=ckpt, train_cfg=tc,
+                              log=lambda *a: None)
+        # fresh process restores and continues
+        state2 = init_state(KEY, cfg, opt, tc)
+        s, state2 = ckpt.restore(state2)
+        assert s == 10
+        state2, hist = train_loop(state2, step, data, 12, ckpt=None,
+                                  train_cfg=tc, log=lambda *a: None)
+        assert int(state2["step"]) == 12
+
+    def test_grad_accum_equivalence(self):
+        """accum=2 equals accum=1 on the same global batch (fp32)."""
+        import dataclasses as dc
+        cfg = dc.replace(get_smoke_config("deepseek-67b"),
+                         compute_dtype="float32")
+        opt = AdamWConfig(lr=1e-3, total_steps=10)
+        data = SyntheticData(vocab=cfg.vocab, seq_len=8, global_batch=4)
+        batch = data.batch(0)
+        outs = {}
+        for accum in (1, 2):
+            tc = TrainConfig(grad_accum=accum)
+            state = init_state(KEY, cfg, opt, tc)
+            step = make_train_step(cfg, opt, tc)
+            state, m = step(state, batch)
+            outs[accum] = (float(m["loss"]), state["params"])
+        assert abs(outs[1][0] - outs[2][0]) < 1e-4
+        for l1, l2 in zip(jax.tree.leaves(outs[1][1]),
+                          jax.tree.leaves(outs[2][1])):
+            np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                       np.asarray(l2, np.float32),
+                                       rtol=1e-4, atol=1e-5)
