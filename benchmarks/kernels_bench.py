@@ -85,3 +85,57 @@ def pallas_interpret_correctness(emit) -> None:
     err = float(jnp.abs(o - ref.reshape(B, H, S, K).transpose(0, 2, 1, 3)).max())
     emit("kernels/pallas-wkv6-interp", (time.perf_counter() - t0) * 1e6,
          f"max_err={err:.2e}")
+
+
+def quant_epitome(emit) -> None:
+    """The flagship fused path (int8-packed quantized epitome) against the
+    execution ladder it replaces: reconstruct / wrapped / fp kernel.
+
+    CPU wall-times compare the jnp paths; the two Pallas rows run interpret
+    mode (correctness + bandwidth model, not hardware speed).  The derived
+    column carries what IS hardware-meaningful everywhere: the weight bytes
+    the path pulls from HBM per matmul — the term the fused kernel shrinks
+    by CR x (32/bits)."""
+    from repro.core.epitome import reconstruct
+    from repro.core.quant import QuantConfig, fake_quant
+    from repro.kernels import ops
+
+    # wrap-design spec (n == bn -> bn-aligned offsets): the kernel's
+    # col-block table equals exact reconstruction, so max_err is pure
+    # quantization tolerance
+    spec = EpitomeSpec(M=1024, N=1024, m=512, n=256, bm=256, bn=256)
+    key = jax.random.PRNGKey(0)
+    E = jax.random.normal(key, (spec.m, spec.n))
+    x = jax.random.normal(key, (128, spec.M))
+    dense_bytes = spec.M * spec.N * 4
+    ep_bytes = spec.m * spec.n * 4
+
+    recon = jax.jit(lambda x, e: epitome_matmul_ref(x, e, spec))
+    wrap = jax.jit(lambda x, e: wrapped_matmul(x, e, spec))
+    t_recon = _time(recon, x, E, iters=3)
+    t_wrap = _time(wrap, x, E, iters=3)
+    emit("kernels/quant_epitome-base-reconstruct", t_recon,
+         f"w_bytes={dense_bytes}")
+    emit("kernels/quant_epitome-base-wrapped", t_wrap,
+         f"w_bytes={dense_bytes}")
+
+    t0 = time.perf_counter()
+    y_fp = ops.epitome_matmul(x, E, spec, interpret=True)
+    emit("kernels/quant_epitome-base-fp-kernel",
+         (time.perf_counter() - t0) * 1e6,
+         f"w_bytes={ep_bytes};CRx{dense_bytes/ep_bytes:.1f}")
+
+    for bits in (8, 4, 3):
+        cfg = QuantConfig(bits=bits)
+        packed = ops.pack_epitome(E, spec, cfg)
+        t0 = time.perf_counter()
+        y = ops.quant_epitome_matmul(x, None, spec, packed=packed,
+                                     interpret=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        # quantization-tolerance check vs the fake-quant reconstruct ref
+        ref = x @ reconstruct(fake_quant(E, spec, cfg), spec)
+        err = float(jnp.abs(y - ref).max())
+        q_bytes = spec.m * spec.n          # int8 storage regardless of bits
+        emit(f"kernels/quant_epitome-{bits}bit", dt,
+             f"max_err={err:.2e};w_bytes={q_bytes};"
+             f"x{dense_bytes/q_bytes:.0f} smaller than dense")

@@ -58,6 +58,9 @@ def roofline(emit) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--csv", default="",
+                    help="also write the emitted rows to this CSV file "
+                         "(CI uploads it as an artifact)")
     args = ap.parse_args()
     from benchmarks import paper_tables, kernels_bench
     sections = {
@@ -66,7 +69,8 @@ def main() -> None:
         "table3": paper_tables.table3,
         "fig4": paper_tables.fig4,
         "kernels": lambda e: (kernels_bench.epitome_modes(e),
-                              kernels_bench.pallas_interpret_correctness(e)),
+                              kernels_bench.pallas_interpret_correctness(e),
+                              kernels_bench.quant_epitome(e)),
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)
@@ -74,6 +78,11 @@ def main() -> None:
     for name, fn in sections.items():
         if name in only:
             fn(emit)
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for row in ROWS:
+                f.write(row + "\n")
 
 
 if __name__ == "__main__":

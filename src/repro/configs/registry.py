@@ -37,6 +37,9 @@ def epitome_settings(variant: str) -> EpitomeSettings:
     wrapped      — + output channel wrapping (§5.3)
     folded       — beyond-paper epitome-space matmul (FLOPs and bytes / CR)
     folded-q3    — folded + 3-bit epitome-aware fake quant (headline row)
+    kernel       — fused Pallas epitome matmul (VMEM-resident epitome)
+    kernel-q3    — fused int8-packed quantized-epitome kernel at 3 bits: the
+                   paper's flagship EPIM configuration (inference-only)
     """
     return {
         "off": EpitomeSettings(enabled=False),
@@ -44,6 +47,8 @@ def epitome_settings(variant: str) -> EpitomeSettings:
         "wrapped": EpitomeSettings(enabled=True, mode="wrapped"),
         "folded": EpitomeSettings(enabled=True, mode="folded"),
         "folded-q3": EpitomeSettings(enabled=True, mode="folded", quant_bits=3),
+        "kernel": EpitomeSettings(enabled=True, mode="kernel"),
+        "kernel-q3": EpitomeSettings(enabled=True, mode="kernel", quant_bits=3),
     }[variant]
 
 

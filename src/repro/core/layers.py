@@ -10,9 +10,26 @@ Execution modes for an epitomized weight, in increasing optimization order:
   'wrapped'     — channel wrapping (§5.3): compute unique output-column
                   blocks only, expand with a static gather (saves FLOPs and
                   output-buffer writes — the paper's optimization).
+  'folded'      — epitome-space matmul: fold activations into epitome rows,
+                  multiply in the compressed space, expand by static gather
+                  (FLOPs and bytes fall by ~CR; beyond-paper, pure jnp).
   'kernel'      — Pallas epitome_matmul: never materializes W in HBM; the
                   epitome stays VMEM-resident across all virtual tiles
                   (beyond-paper TPU optimization; see kernels/epitome_matmul).
+
+Each mode composes with ``quant`` (epitome-aware quantization, §4.2).  The
+first three apply *fake* quantization — E is quantized+dequantized in fp
+before the matmul, so accuracy effects are modeled but storage/bandwidth is
+not.  'kernel' + quant is the real thing, and the paper's flagship
+configuration (e.g. 3-bit EPIM-ResNet50): the epitome is packed to int8
+codes with per-crossbar-tile (scale, zero) and the fused
+kernels/quant_epitome_matmul dequantizes in registers — the kernel reads
+only int8, once, for all virtual tiles.  By default the pack step runs
+inside the jitted forward (one O(m*n) quantize per call, fused by XLA);
+weight-stationary serving should `prepack_linear` the params once so
+forwards skip re-quantizing entirely.  The fused path is inference-only
+(codes are rounded, no STE); training under quantization uses the
+fake-quant modes.
 """
 from __future__ import annotations
 
@@ -63,15 +80,77 @@ def init_linear(key: Array, M: int, N: int, cfg: EpLayerConfig,
     return p
 
 
+def _quant_kernel_inference_only(x: Array, E: Array, cfg: EpLayerConfig,
+                                 packed) -> Array:
+    """Run the fused quantized-epitome kernel, opaque to autodiff.
+
+    The custom_vjp makes AD call our bwd instead of differentiating through
+    the Pallas call; bwd raises a targeted error because the packed int8
+    codes go through a hard round with no straight-through estimator —
+    differentiating would silently train nothing."""
+    from repro.kernels.ops import quant_epitome_matmul
+
+    @jax.custom_vjp
+    def call(x, E):
+        return quant_epitome_matmul(x, E, cfg.spec, cfg.quant, packed=packed)
+
+    def fwd(x, E):
+        return call(x, E), None
+
+    def bwd(_, g):
+        raise NotImplementedError(
+            "mode='kernel' with quant is inference-only: the packed int8 "
+            "codes have no straight-through estimator. Train under "
+            "quantization with a fake-quant mode (e.g. 'folded'/folded-q3) "
+            "and switch to the fused kernel for serving.")
+
+    call.defvjp(fwd, bwd)
+    return call(x, E)
+
+
+def prepack_linear(params: dict, cfg: EpLayerConfig) -> dict:
+    """Inference-time prepack for the fused quantized-epitome path.
+
+    For a mode='kernel' x quant epitome layer, quantizes the epitome ONCE
+    (int8 codes + per-block scale/zero) and stores it alongside E, so every
+    subsequent apply_linear skips re-quantizing and feeds the kernel pure
+    int8.  A no-op for every other layer kind.  Pure jnp on E, so it also
+    works under vmap over stacked param groups."""
+    if not (cfg.is_epitome and cfg.quant is not None and cfg.mode == "kernel"):
+        return params
+    from repro.kernels.ops import pack_epitome
+    p = pack_epitome(params["E"], cfg.spec, cfg.quant)
+    out = dict(params)
+    out["Eq"], out["Es"], out["Ez"] = p.q, p.scales, p.zeros
+    return out
+
+
+def _packed_of(params: dict, cfg: EpLayerConfig):
+    """Rebuild the PackedEpitome from prepacked param entries (block sizes
+    are deterministic from spec + qcfg, so only the arrays are stored)."""
+    from repro.kernels.ops import PackedEpitome, pack_blocks
+    bk, bn = pack_blocks(cfg.spec, cfg.quant)
+    return PackedEpitome(params["Eq"], params["Es"], params["Ez"], bk, bn)
+
+
 def effective_weight(params: dict, cfg: EpLayerConfig) -> Array:
     """The (possibly fake-quantized) weight a layer multiplies by.
 
-    Only used by 'reconstruct' mode and by tests; 'wrapped'/'kernel' modes
-    never materialize the full W."""
+    Used by 'reconstruct' mode, by the quantization parity tests, and as
+    the reference the kernel modes are compared against on aligned specs;
+    'wrapped'/'kernel' modes never materialize the full W at runtime."""
     if cfg.is_epitome:
         E = params["E"]
         if cfg.quant is not None:
-            E = fake_quant(E, cfg.spec, cfg.quant)
+            if cfg.mode == "kernel":
+                # mirror the fused path's packed (int8, per-block s/z) quant
+                from repro.kernels.ops import pack_epitome
+                from .quant import dequantize_packed
+                p = pack_epitome(E, cfg.spec, cfg.quant)
+                E = dequantize_packed(p.q, p.scales, p.zeros,
+                                      (p.bk, p.bn)).astype(E.dtype)
+            else:
+                E = fake_quant(E, cfg.spec, cfg.quant)
         return reconstruct(E, cfg.spec)
     W = params["W"]
     if cfg.quant is not None:
@@ -88,20 +167,27 @@ def apply_linear(params: dict, x: Array, cfg: EpLayerConfig) -> Array:
         y = x @ W.astype(x.dtype)
     else:
         E = params["E"]
-        if cfg.quant is not None:
-            E = fake_quant(E, cfg.spec, cfg.quant)
-        if cfg.mode == "reconstruct":
-            y = epitome_matmul_ref(x, E, cfg.spec)
-        elif cfg.mode == "wrapped":
-            y = wrapped_matmul(x, E, cfg.spec)
-        elif cfg.mode == "folded":
-            y = folded_matmul(x, E, cfg.spec)
-        elif cfg.mode == "kernel":
+        if cfg.mode == "kernel":
             # import here to keep layers importable without pallas
-            from repro.kernels.ops import epitome_matmul
-            y = epitome_matmul(x, E, cfg.spec)
+            if cfg.quant is not None:
+                # fused path: int8 codes + per-tile dequant in the kernel;
+                # prepacked params (prepack_linear) skip the quantize step
+                packed = _packed_of(params, cfg) if "Eq" in params else None
+                y = _quant_kernel_inference_only(x, E, cfg, packed)
+            else:
+                from repro.kernels.ops import epitome_matmul
+                y = epitome_matmul(x, E, cfg.spec)
         else:
-            raise ValueError(f"unknown mode {cfg.mode}")
+            if cfg.quant is not None:
+                E = fake_quant(E, cfg.spec, cfg.quant)
+            if cfg.mode == "reconstruct":
+                y = epitome_matmul_ref(x, E, cfg.spec)
+            elif cfg.mode == "wrapped":
+                y = wrapped_matmul(x, E, cfg.spec)
+            elif cfg.mode == "folded":
+                y = folded_matmul(x, E, cfg.spec)
+            else:
+                raise ValueError(f"unknown mode {cfg.mode}")
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
@@ -127,7 +213,13 @@ def init_conv(key: Array, kh: int, kw: int, cin: int, cout: int,
 def apply_conv(params: dict, x: Array, kh: int, kw: int, cin: int, cout: int,
                cfg: EpLayerConfig, *, stride: int = 1, padding: str = "SAME") -> Array:
     """Conv in crossbar space: the epitome reconstructs the im2col matrix
-    (kh*kw*cin, cout) — exactly the PIM mapping [13] of rows/cols."""
+    (kh*kw*cin, cout) — exactly the PIM mapping [13] of rows/cols.
+
+    NOTE: unlike apply_linear, convs currently ignore cfg.mode — every mode
+    reconstructs W (with fake-quant when cfg.quant is set).  Dispatching the
+    im2col matmul through the wrapped/folded/fused-kernel paths is open
+    work; until then only linear layers get the mode='kernel' x quant int8
+    execution."""
     if cfg.is_epitome:
         E = params["E"]
         if cfg.quant is not None:

@@ -181,6 +181,59 @@ def dequantize_epitome(q: Array, S: Array, Z: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Packed (int8-storage) quantization — the kernel-side contract
+# ---------------------------------------------------------------------------
+def _block_reduce(x: Array, bk: int, bn: int, fn) -> Array:
+    """Reduce an (m, n) map to (m/bk, n/bn) per exact (bk x bn) block."""
+    m, n = x.shape
+    assert m % bk == 0 and n % bn == 0, (m, bk, n, bn)
+    return fn(x.reshape(m // bk, bk, n // bn, bn), axis=(1, 3))
+
+
+def _expand_blocks(t: Array, bk: int, bn: int) -> Array:
+    return jnp.repeat(jnp.repeat(t, bk, 0), bn, 1)
+
+
+def code_shift(cfg: QuantConfig) -> int:
+    """Shift folding the unsigned code range into int8: storing q - shift and
+    z + shift leaves (q + z) * s unchanged (symmetric codes are already
+    signed, shift 0)."""
+    return 0 if cfg.symmetric else 1 << (cfg.bits - 1)
+
+
+def quantize_epitome_packed(E: Array, spec: Optional[EpitomeSpec],
+                            cfg: QuantConfig, block: Tuple[int, int]
+                            ) -> Tuple[Array, Array, Array]:
+    """Pack an epitome for the fused quant kernel.
+
+    Returns (q, scales, zeros): q is (m, n) **int8** codes; scales/zeros are
+    (m/bk, n/bn) fp32, one pair per kernel block — the per-crossbar-tile
+    contract of kernels/quant_epitome_matmul.  Ranges come from the same
+    epitome-aware machinery as fake_quant (overlap-weighted + per-crossbar,
+    Eq. 4-5), reduced to one envelope per block, so when blocks nest inside
+    ``cfg.tile`` crossbars the codes are bit-identical to fake_quant's.
+    """
+    bk, bn = block
+    alpha, beta = epitome_ranges(E, spec, cfg)
+    a_b = _block_reduce(alpha, bk, bn, jnp.min)
+    b_b = _block_reduce(beta, bk, bn, jnp.max)
+    S, Z = scale_zero(a_b, b_b, cfg)
+    q = quantize(E, _expand_blocks(S, bk, bn), _expand_blocks(Z, bk, bn), cfg)
+    shift = code_shift(cfg)
+    return (q - shift).astype(jnp.int8), S, Z + shift
+
+
+def dequantize_packed(q: Array, scales: Array, zeros: Array,
+                      block: Tuple[int, int]) -> Array:
+    """Inverse of quantize_epitome_packed (the jnp oracle the kernel's
+    in-register dequant is tested against): (q + z) * s per block."""
+    bk, bn = block
+    S = _expand_blocks(scales, bk, bn)
+    Z = _expand_blocks(zeros, bk, bn)
+    return (q.astype(jnp.float32) + Z) * S
+
+
+# ---------------------------------------------------------------------------
 # Fake quant with straight-through estimator (for QAT retraining, §7.1)
 # ---------------------------------------------------------------------------
 @jax.custom_vjp

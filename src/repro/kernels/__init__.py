@@ -11,6 +11,12 @@ wkv6           — chunked data-dependent-decay linear attention (RWKV6) with
 quant_matmul   — int8/intN dequant matmul with one scale/zero pair per
                  crossbar-sized (256x256) weight tile: the paper's
                  per-crossbar scaling factors executed on the MXU.
+quant_epitome_matmul — the fusion of the two above and the paper's flagship
+                 configuration (e.g. 3-bit EPIM-ResNet50): the epitome stays
+                 int8-packed in VMEM, per-crossbar-tile (scale, zero) dequant
+                 happens in registers, and the scalar-prefetched OFAT table
+                 steers output-column indirection — one int8 HBM read of the
+                 compressed weight serves every virtual tile.
 
 Each kernel ships a pure-jnp oracle in ref.py and a jit'd public wrapper in
 ops.py; tests sweep shapes/dtypes in interpret mode against the oracle.

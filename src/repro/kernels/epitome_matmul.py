@@ -1,6 +1,6 @@
 """Pallas TPU kernel: epitome-space blocked matmul with output indirection.
 
-Computes  y[:, j*bn:(j+1)*bn] = x_folded @ E[:, cb[j]*bn:(cb[j)+1)*bn]
+Computes  y[:, j*bn:(j+1)*bn] = x_folded @ E[:, cb[j]*bn:(cb[j]+1)*bn]
 for every output-column block j, where ``cb`` is the static column-block
 offset table derived from the EpitomeSpec (the TPU analogue of the paper's
 OFAT: it steers which epitome columns produce which output columns, at

@@ -9,14 +9,16 @@ interpret=True; on TPU the same code JITs to Mosaic.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.epitome import EpitomeSpec
+from ..core.quant import QuantConfig, quantize_epitome_packed
 from .epitome_matmul import epitome_matmul_blocks
+from .quant_epitome_matmul import quant_epitome_matmul_blocks
 from .quant_matmul import quant_matmul as _quant_matmul
 from .wkv6 import wkv6_chunked
 
@@ -47,25 +49,20 @@ def epitome_matmul(x: jax.Array, E: jax.Array, spec: EpitomeSpec,
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
     folded = fold_rows(x2, spec)                     # (T, m)
-    cb = kernel_col_blocks(spec)
-    # snap col offsets to block multiples (kernel contract)
-    T = folded.shape[0]
-    bt = _pick_bt(T)
-    pad_t = (-T) % bt
-    if pad_t:
-        folded = jnp.pad(folded, ((0, pad_t), (0, 0)))
-    y = epitome_matmul_blocks(folded, E.astype(x.dtype), cb,
-                              bt=bt, bk=_pick_bk(spec.m), bn=spec.bn,
+    y = epitome_matmul_blocks(folded, E.astype(x.dtype),
+                              kernel_col_blocks(spec),
+                              bt=_pick_bt(folded.shape[0]),
+                              bk=_pick_bk(spec.m), bn=spec.bn,
                               interpret=interpret)
-    y = y[:T, :spec.N] if pad_t else y[:, :spec.N]
-    return y.reshape(*lead, spec.N)
+    return y[:, :spec.N].reshape(*lead, spec.N)
 
 
 def _pick_bt(T: int) -> int:
-    for bt in (256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if T % bt == 0 or T >= bt and T % bt == 0:
-            if T % bt == 0:
-                return bt
+    """Largest row block that divides T exactly (1 always does, so the
+    kernels never need row padding)."""
+    for bt in (256, 128, 64, 32, 16, 8, 4, 2):
+        if T % bt == 0:
+            return bt
     return 1
 
 
@@ -98,11 +95,66 @@ def quant_matmul(x, q, scales, zeros, *, interpret: Optional[bool] = None):
     interpret = _INTERPRET if interpret is None else interpret
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
-    T = x2.shape[0]
-    bt = _pick_bt(T)
-    pad_t = (-T) % bt
-    if pad_t:
-        x2 = jnp.pad(x2, ((0, pad_t), (0, 0)))
-    y = _quant_matmul(x2, q, scales, zeros, bt=bt, interpret=interpret)
-    y = y[:T]
+    y = _quant_matmul(x2, q, scales, zeros, bt=_pick_bt(x2.shape[0]),
+                      interpret=interpret)
     return y.reshape(*lead, q.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Fused quantized-epitome path (the paper's flagship configuration)
+# ---------------------------------------------------------------------------
+class PackedEpitome(NamedTuple):
+    """An epitome packed for the fused kernel: int8 codes + per-block
+    (scale, zero).  Pack once (offline / at load), reuse every forward."""
+    q: jax.Array          # (m, n) int8
+    scales: jax.Array     # (m/bk, n/bn) fp32
+    zeros: jax.Array      # (m/bk, n/bn) fp32
+    bk: int
+    bn: int
+
+
+def _pick_bk_quant(m: int, tile: int) -> int:
+    """Row-block for the quant kernel: never wider than the quantizer's
+    crossbar tile, so each kernel block nests inside one scale tile and the
+    packed codes stay bit-identical to fake_quant's."""
+    for bk in (256, 128, 64, 32, 16, 8):
+        if bk <= tile and m % bk == 0:
+            return bk
+    return m
+
+
+def pack_blocks(spec: EpitomeSpec, qcfg: QuantConfig) -> tuple:
+    """The (bk, bn) kernel block a pack of (spec, qcfg) uses — deterministic,
+    so prepacked storage only needs the arrays."""
+    return _pick_bk_quant(spec.m, qcfg.tile), spec.bn
+
+
+def pack_epitome(E: jax.Array, spec: EpitomeSpec, qcfg: QuantConfig
+                 ) -> PackedEpitome:
+    """Quantize an epitome into the kernel's storage layout."""
+    bk, bn = pack_blocks(spec, qcfg)
+    q, scales, zeros = quantize_epitome_packed(E, spec, qcfg, (bk, bn))
+    return PackedEpitome(q, scales, zeros, bk, bn)
+
+
+def quant_epitome_matmul(x: jax.Array, E: Optional[jax.Array],
+                         spec: EpitomeSpec, qcfg: Optional[QuantConfig] = None,
+                         *, packed: Optional[PackedEpitome] = None,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """y = x @ W(deq(Q(E))) via the fused int8-epitome kernel.
+
+    Pass ``packed`` (from pack_epitome) to skip re-quantizing per call —
+    the serving path; otherwise E is packed on the fly (jit folds the pack
+    into the same program, still one HBM read of int8 codes)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    if packed is None:
+        assert E is not None and qcfg is not None
+        packed = pack_epitome(E, spec, qcfg)
+    *lead, M = x.shape
+    x2 = x.reshape(-1, M)
+    folded = fold_rows(x2, spec)                     # (T, m)
+    y = quant_epitome_matmul_blocks(
+        folded.astype(x.dtype), packed.q, packed.scales, packed.zeros,
+        kernel_col_blocks(spec), bt=_pick_bt(folded.shape[0]),
+        bk=packed.bk, bn=packed.bn, interpret=interpret)
+    return y[:, :spec.N].reshape(*lead, spec.N)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused quantized-epitome matmul (EPIM's flagship path).
+
+The paper's headline configuration combines BOTH compression axes — the
+epitome operator (crossbar-area reduction) and epitome-aware quantization
+(§4.2, per-crossbar scaling factors).  This kernel executes that combination
+in one MXU hot loop:
+
+  y[:, j*bn:(j+1)*bn] = x_folded @ deq(Q[:, cb[j]*bn:(cb[j]+1)*bn])
+  deq(Q_blk) = (Q_blk + z[k, cb[j]]) * s[k, cb[j]]
+
+for every output-column block j, where
+
+  * ``Q`` is the epitome stored as **int8 codes** — it stays int8 all the
+    way into VMEM, so HBM traffic is 4x smaller than bf16 x2 and the whole
+    (already CR-x-compressed) epitome is read from HBM exactly once;
+  * ``(s, z)`` are one (scale, zero) pair per kernel block (bk x bn) — the
+    crossbar-tile contract shared with quant_matmul: each grid step consumes
+    exactly one scalar pair, dequantized in registers right before the dot;
+  * ``cb`` is the scalar-prefetched OFAT column-block table from
+    kernel_col_blocks.  Duplicated entries ARE the paper's output channel
+    wrapping: the same int8 block is re-read from VMEM for free.
+
+Grid: (T/bt, gn, m/bk), k innermost for accumulation.  VMEM per step:
+x (bt, bk) + Q (bk, bn) int8 + acc (bt, bn) fp32 + two scalars.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(cb_ref, x_ref, q_ref, s_ref, z_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dequantize this epitome block in registers: one (s, z) per block
+    w = (q_ref[...].astype(jnp.float32) + z_ref[0, 0]) * s_ref[0, 0]
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_epitome_matmul_blocks(x_folded: Array, q: Array, scales: Array,
+                                zeros: Array, col_blocks,
+                                *, bt: int = 256, bk: int = 256, bn: int = 0,
+                                interpret: bool = False) -> Array:
+    """x_folded: (T, m); q: (m, n) int8 epitome codes; scales/zeros:
+    (m/bk, n/bn) fp32 per-block dequant params; col_blocks: (gn,) int32
+    block indices into q's column blocks of width bn.  Returns (T, gn*bn)."""
+    T, m = x_folded.shape
+    m2, n = q.shape
+    col_blocks = jnp.asarray(col_blocks, jnp.int32)
+    gn = col_blocks.shape[0]
+    bn = bn or min(n, 256)
+    assert m == m2, (m, m2)
+    assert n % bn == 0, f"epitome cols {n} must tile by {bn}"
+    bt = min(bt, T)
+    bk = min(bk, m)
+    assert T % bt == 0 and m % bk == 0, (T, bt, m, bk)
+    assert scales.shape == (m // bk, n // bn), (scales.shape, m // bk, n // bn)
+    assert zeros.shape == scales.shape, (zeros.shape, scales.shape)
+    nk = m // bk
+
+    grid = (T // bt, gn, nk)
+    kernel = functools.partial(_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, bk), lambda i, j, k, cb: (i, k)),
+                pl.BlockSpec((bk, bn), lambda i, j, k, cb: (k, cb[j])),
+                pl.BlockSpec((1, 1), lambda i, j, k, cb: (k, cb[j])),
+                pl.BlockSpec((1, 1), lambda i, j, k, cb: (k, cb[j])),
+            ],
+            out_specs=pl.BlockSpec((bt, bn), lambda i, j, k, cb: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, gn * bn), x_folded.dtype),
+        interpret=interpret,
+    )(col_blocks, x_folded, q, scales, zeros)

@@ -42,3 +42,15 @@ def quant_matmul_ref(x: Array, q: Array, scales: Array, zeros: Array,
     z_full = jnp.repeat(jnp.repeat(zeros, tile, 0), tile, 1)[:M, :N]
     W = (q.astype(jnp.float32) + z_full) * s_full
     return (x.astype(jnp.float32) @ W).astype(x.dtype)
+
+
+def quant_epitome_matmul_blocks_ref(x_folded: Array, q: Array, scales: Array,
+                                    zeros: Array, col_blocks,
+                                    bk: int, bn: int) -> Array:
+    """Fused-kernel oracle: dequantize the whole int8 epitome per (bk x bn)
+    block (via the one packed-dequant contract in core.quant), then the same
+    column-block-indirected matmul as the fp oracle."""
+    from ..core.quant import dequantize_packed
+    E = dequantize_packed(q, scales, zeros, (bk, bn))
+    return epitome_matmul_blocks_ref(x_folded.astype(jnp.float32), E,
+                                     col_blocks, bn).astype(x_folded.dtype)

@@ -7,15 +7,24 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions: `axis_types` (and
+    jax.sharding.AxisType) only exist from jax 0.5; older jaxlibs default to
+    Auto semantics anyway, so omit the kwarg when it's unavailable."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2x16x16 = 512 chips (pod, data, model); the pod axis is pure
     data parallelism whose gradient all-reduce crosses the DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -23,9 +32,7 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e-class hardware constants (per chip) used by the roofline

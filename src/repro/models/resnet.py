@@ -57,6 +57,21 @@ class ResNetModel:
                 }
         return params
 
+    def prepack(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        """Inference prepack of the *fc* layers: quantize kernel x quant
+        epitome linears once (int8 codes + per-block scale/zero) so apply()
+        skips re-quantizing them every forward.  Conv layers are untouched —
+        apply_conv always reconstructs W from the (fake-quantized) epitome
+        regardless of mode; routing convs through the fused kernel via
+        im2col is future work.  No-op for other modes."""
+        from ..core.layers import prepack_linear
+        out = dict(params)
+        for l, spec in zip(self.layers, self.specs):
+            if l.kind == "fc":
+                cfg = _ep_cfg(spec, self.quant_bits, self.mode)
+                out[l.name] = prepack_linear(params[l.name], cfg)
+        return out
+
     def _conv_bn(self, p, x, l: LayerShape, spec, act=True):
         cfg = _ep_cfg(spec, self.quant_bits, self.mode)
         y = apply_conv(p["conv"], x, l.kh, l.kw, l.cin, l.cout, cfg,

@@ -131,3 +131,136 @@ class TestQuantMatmul:
         y = ops.quant_matmul(x, q_i8, s_t, z_t, interpret=True)
         ref = x @ dequantize(qfull, S, Z)
         np.testing.assert_allclose(y, ref, rtol=1e-3, atol=1e-3)
+
+
+# epitome designs whose col-block table is exact (bn-aligned offsets):
+# aligned — two distinct column blocks at offsets [0, 256]
+# wrapped — n == bn, every output block reuses epitome block 0 (cb=[0,0,0])
+ALIGNED = dict(M=512, N=512, m=256, n=512, bm=128, bn=256)
+WRAPPED = dict(M=512, N=768, m=256, n=256, bm=128, bn=256)
+
+
+class TestQuantEpitomeMatmul:
+    @pytest.mark.parametrize("bits", [8, 4, 3])
+    @pytest.mark.parametrize("spec_kw", [ALIGNED, WRAPPED],
+                             ids=["aligned", "wrapped"])
+    def test_parity_vs_fake_quant_reconstruct(self, bits, spec_kw):
+        """Fused kernel == x @ reconstruct(fake_quant(E)) within quantization
+        tolerance (the acceptance contract).  The packed per-block (s, z)
+        nest inside the quantizer's crossbar tiles, so codes are identical
+        and the residual is pure fp accumulation error."""
+        from repro.core.quant import QuantConfig, fake_quant
+        spec = EpitomeSpec(**spec_kw)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, spec.M))
+        cfg = QuantConfig(bits=bits)
+        y = ops.quant_epitome_matmul(x, E, spec, cfg, interpret=True)
+        ref = x @ reconstruct(fake_quant(E, spec, cfg), spec)
+        tol = 1e-3 * max(1.0, float(jnp.abs(ref).max()))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-3, atol=tol)
+
+    @pytest.mark.parametrize("M,N,m,n,bm,bn", [
+        (512, 512, 256, 512, 128, 256),
+        (512, 768, 256, 256, 128, 256),
+        (1024, 1024, 512, 512, 128, 256),   # non-aligned offsets (snapped)
+    ])
+    def test_vs_block_oracle(self, M, N, m, n, bm, bn):
+        """Exact agreement with the jnp oracle on the kernel's own contract
+        (col-block table + per-block dequant), incl. snapped offsets."""
+        from repro.core.quant import QuantConfig
+        from repro.kernels.ref import quant_epitome_matmul_blocks_ref
+        spec = EpitomeSpec(M=M, N=N, m=m, n=n, bm=bm, bn=bn)
+        E = jax.random.normal(KEY, (m, n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, M))
+        p = ops.pack_epitome(E, spec, QuantConfig(bits=4))
+        y = ops.quant_epitome_matmul(x, None, spec, packed=p, interpret=True)
+        ref = quant_epitome_matmul_blocks_ref(
+            ops.fold_rows(x, spec), p.q, p.scales, p.zeros,
+            ops.kernel_col_blocks(spec), p.bk, p.bn)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref[:, :N]),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_prepacked_matches_on_the_fly(self):
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**WRAPPED)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, spec.M))
+        cfg = QuantConfig(bits=3)
+        y1 = ops.quant_epitome_matmul(x, E, spec, cfg, interpret=True)
+        y2 = ops.quant_epitome_matmul(x, None, spec,
+                                      packed=ops.pack_epitome(E, spec, cfg),
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_batched_and_ragged_T(self):
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**ALIGNED)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(KEY, (2, 5, spec.M))     # T = 10, non-pow2
+        y = ops.quant_epitome_matmul(x, E, spec, QuantConfig(bits=8),
+                                     interpret=True)
+        assert y.shape == (2, 5, spec.N)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_layer_prepack_and_effective_weight(self):
+        """prepack_linear feeds the kernel stored int8 (same result, no
+        re-quantize), and effective_weight mirrors the fused path's packed
+        quantization exactly on an aligned spec."""
+        from repro.core.layers import (EpLayerConfig, apply_linear,
+                                       effective_weight, init_linear,
+                                       prepack_linear)
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**ALIGNED)
+        cfg = EpLayerConfig(spec=spec, mode="kernel", quant=QuantConfig(bits=4))
+        params = init_linear(KEY, spec.M, spec.N, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(5), (16, spec.M))
+        y = apply_linear(params, x, cfg)
+        pp = prepack_linear(params, cfg)
+        assert pp["Eq"].dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(apply_linear(pp, x, cfg)),
+                                      np.asarray(y))
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(x @ effective_weight(params, cfg)),
+            rtol=1e-4, atol=1e-4)
+
+    def test_symmetric_quant(self):
+        from repro.core.quant import QuantConfig, fake_quant
+        spec = EpitomeSpec(**WRAPPED)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, spec.M))
+        cfg = QuantConfig(bits=8, symmetric=True)
+        y = ops.quant_epitome_matmul(x, E, spec, cfg, interpret=True)
+        ref = x @ reconstruct(fake_quant(E, spec, cfg), spec)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestPickBt:
+    def test_divides(self):
+        for T in (1, 2, 3, 5, 7, 10, 12, 24, 96, 100, 256, 384, 1000):
+            bt = ops._pick_bt(T)
+            assert 1 <= bt <= 256 and T % bt == 0, (T, bt)
+
+    def test_prefers_largest_divisor(self):
+        assert ops._pick_bt(512) == 256
+        assert ops._pick_bt(96) == 32
+        assert ops._pick_bt(7) == 1
+
+    @pytest.mark.parametrize("T", [12, 96])
+    def test_non_pow2_T_both_kernel_paths(self, T):
+        """Non-power-of-two row counts go through both the fp and the
+        quantized epitome kernels without padding artifacts."""
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**ALIGNED)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(4), (T, spec.M))
+        y_fp = ops.epitome_matmul(x, E, spec, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_fp),
+                                   np.asarray(x @ reconstruct(E, spec)),
+                                   rtol=1e-4, atol=1e-4)
+        p = ops.pack_epitome(E, spec, QuantConfig(bits=8))
+        y_q = ops.quant_epitome_matmul(x, None, spec, packed=p,
+                                       interpret=True)
+        assert y_q.shape == (T, spec.N)
+        assert bool(jnp.all(jnp.isfinite(y_q)))

@@ -26,6 +26,7 @@ def batch_for(cfg, key=KEY, b=B, s=S):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -40,6 +41,7 @@ def test_smoke_train_step(arch):
     assert logits.shape == (B, S, cfg.vocab)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_decode(arch):
     cfg = get_smoke_config(arch)
@@ -58,6 +60,7 @@ def test_smoke_decode(arch):
     assert bool(jnp.all(jnp.isfinite(l2)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-72b", "rwkv6-7b",
                                   "jamba-1.5-large-398b", "gemma2-2b",
                                   "phi3.5-moe-42b-a6.6b", "musicgen-large"])
@@ -115,6 +118,27 @@ def test_quantized_epitome_trains():
     assert bool(jnp.isfinite(loss))
     gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
     assert np.isfinite(gn) and gn > 0
+
+
+def test_quantized_epitome_kernel_inference():
+    """The flagship fused path (mode='kernel' x quant -> int8-packed Pallas
+    kernel) serves a whole LM forward unchanged."""
+    cfg = get_smoke_config("qwen2-72b", epitome="kernel-q3")
+    params = lm.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    logits = lm.forward(params, toks, cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_quantized_epitome_kernel_refuses_training():
+    """The fused int8 path has no STE, so differentiating through it must
+    fail loudly instead of silently training nothing."""
+    cfg = get_smoke_config("qwen2-72b", epitome="kernel-q3")
+    params = lm.init_params(KEY, cfg)
+    batch = batch_for(cfg)
+    with pytest.raises(NotImplementedError, match="inference-only"):
+        jax.grad(lm.loss_fn)(params, batch, cfg)
 
 
 def test_gemma2_softcaps_applied():

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.epitome import EpitomeSpec, init_epitome
 from repro.core.quant import (
@@ -83,6 +83,53 @@ class TestQuantizeDequantize:
         g = jax.grad(lambda e: (fake_quant(e, SPEC, cfg) ** 2).sum())(E)
         # STE: gradient flows (nonzero) and is finite
         assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).sum()) > 0
+
+
+class TestPackedQuantize:
+    """quantize_epitome_packed: the int8 + per-block (s, z) kernel contract."""
+
+    def test_int8_storage_and_shapes(self):
+        from repro.core.quant import quantize_epitome_packed
+        E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+        for bits in (8, 4, 3):
+            q, S, Z = quantize_epitome_packed(E, SPEC, QuantConfig(bits=bits),
+                                              block=(128, 128))
+            assert q.dtype == jnp.int8 and q.shape == E.shape
+            assert S.shape == (SPEC.m // 128, SPEC.n // 128) == Z.shape
+            # codes span at most 2^bits levels around the folded zero point
+            assert int(q.max()) - int(q.min()) <= (1 << bits) - 1
+
+    def test_dequant_roundtrip_within_one_step(self):
+        from repro.core.quant import dequantize_packed, quantize_epitome_packed
+        E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+        # full min/max ranges (no overlap-weighted shrinking, which may
+        # deliberately clip outliers beyond one step)
+        cfg = QuantConfig(bits=8, overlap_weighted=False)
+        q, S, Z = quantize_epitome_packed(E, SPEC, cfg, block=(128, 128))
+        back = dequantize_packed(q, S, Z, (128, 128))
+        assert float(jnp.abs(back - E).max()) <= float(S.max()) * 1.01
+
+    def test_matches_fake_quant_when_blocks_nest_in_tiles(self):
+        """Blocks no wider than cfg.tile pick up exactly the tile's range,
+        so the packed path and fake_quant produce identical dequant values
+        — the property the kernel parity tests rely on."""
+        from repro.core.quant import dequantize_packed, quantize_epitome_packed
+        E = heavy_tailed_epitome()
+        for bits in (8, 4, 3):
+            cfg = QuantConfig(bits=bits, tile=128)
+            q, S, Z = quantize_epitome_packed(E, SPEC, cfg, block=(128, 128))
+            back = dequantize_packed(q, S, Z, (128, 128))
+            fq = fake_quant(E, SPEC, cfg)
+            np.testing.assert_allclose(np.asarray(back), np.asarray(fq),
+                                       rtol=0, atol=1e-6)
+
+    def test_symmetric_codes_signed(self):
+        from repro.core.quant import quantize_epitome_packed
+        E = jax.random.normal(KEY, (SPEC.m, SPEC.n))
+        cfg = QuantConfig(bits=8, symmetric=True)
+        q, S, Z = quantize_epitome_packed(E, SPEC, cfg, block=(128, 128))
+        assert int(q.min()) < 0 < int(q.max())
+        np.testing.assert_allclose(np.asarray(Z), 0.0)
 
 
 @settings(max_examples=25, deadline=None)

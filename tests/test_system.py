@@ -10,6 +10,10 @@ import textwrap
 
 import pytest
 
+# every test here boots jax in a fresh multi-device subprocess — minutes of
+# wall-time on CPU, so the whole module runs in the nightly -m slow lane
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -32,8 +36,8 @@ def test_moe_dispatch_matches_dense():
         from repro.configs import get_smoke_config
         from repro.models import moe
         from repro.models.common import set_mesh
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         set_mesh(mesh)
         cfg = dataclasses.replace(get_smoke_config("phi3.5-moe-42b-a6.6b"),
                                   capacity_factor=8.0,
@@ -60,8 +64,8 @@ def test_moe_grok_replicated_experts():
         from repro.configs import get_smoke_config
         from repro.models import moe
         from repro.models.common import set_mesh
-        mesh = jax.make_mesh((8, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8, 1), ("data", "model"))
         set_mesh(mesh)
         cfg = dataclasses.replace(get_smoke_config("grok-1-314b"),
                                   capacity_factor=8.0,
@@ -92,8 +96,8 @@ def test_sharded_train_step_runs():
         from repro.train.loop import TrainConfig, init_state, make_train_step
         from repro.train.optimizer import AdamWConfig
         from repro.train.data import SyntheticData
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         set_mesh(mesh)
         cfg = get_smoke_config("qwen2-72b")
         opt = AdamWConfig(lr=1e-3, total_steps=5)
@@ -123,8 +127,8 @@ def test_mini_multipod_dryrun():
         from repro.models.common import set_mesh, clean_spec
         from repro.train.loop import TrainConfig, init_state, make_train_step
         from repro.train.optimizer import AdamWConfig
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
         set_mesh(mesh)
         cfg = get_smoke_config("jamba-1.5-large-398b")
         opt = AdamWConfig(moments_dtype="int8")
@@ -161,15 +165,14 @@ def test_elastic_restart_new_mesh():
         from jax.sharding import NamedSharding
         cfg = get_smoke_config("deepseek-67b")
         d = tempfile.mkdtemp()
-        mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh1 = compat_make_mesh((4, 2), ("data", "model"))
         set_mesh(mesh1)
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         mgr = CheckpointManager(d, async_write=False)
         mgr.save(1, params, blocking=True)
         # "restart" on a different layout
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = compat_make_mesh((2, 4), ("data", "model"))
         set_mesh(mesh2)
         specs = lm.param_specs(cfg, jax.eval_shape(lambda: params))
         from repro.models.common import clean_spec

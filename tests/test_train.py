@@ -148,6 +148,7 @@ class TestCompression:
         assert float(err.max()) < 1e-3
 
 
+@pytest.mark.slow
 class TestLoop:
     def test_loss_decreases_smoke(self, tmp_path):
         cfg = get_smoke_config("gemma2-2b")
