@@ -87,6 +87,47 @@ def pallas_interpret_correctness(emit) -> None:
          f"max_err={err:.2e}")
 
 
+def conv_quant_epitome(emit) -> None:
+    """The fused int8 kernel on conv-shaped row counts (T = N*H'*W'),
+    ResNet-50 geometry — including T = 196 and T = 49, the prime/odd row
+    counts that used to collapse _pick_bt to bt=1 grids.  The derived
+    column carries the chosen row block (bt) so CI can assert no
+    degenerate grids, plus quantization tolerance vs the fake-quant
+    reconstruct reference on the same im2col patch matrix."""
+    from repro.core.epitome import reconstruct
+    from repro.core.layers import im2col
+    from repro.core.quant import QuantConfig, fake_quant
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    # (label, k, cin, cout, hw_out, batch) with the paper's 1024x256 epitome
+    cases = [
+        ("r50-layer3.conv2", 3, 256, 256, 14, 1),    # T = 196 (the cliff)
+        ("r50-layer4.conv2", 3, 512, 512, 7, 1),     # T = 49
+        ("r50-layer4.conv1", 1, 2048, 512, 7, 4),    # T = 196, 1x1 conv
+    ]
+    qcfg = QuantConfig(bits=3)
+    for label, k, cin, cout, hw, batch in cases:
+        spec = EpitomeSpec(M=k * k * cin, N=cout, m=1024, n=256,
+                           bm=256, bn=256)
+        E = jax.random.normal(key, (spec.m, spec.n))
+        x = jax.random.normal(key, (batch, hw, hw, cin))
+        patches = im2col(x, k, k, stride=1, padding="SAME")
+        T = batch * hw * hw
+        bt = ops._pick_bt(T)
+        assert bt > 1, (label, T, bt)
+        packed = ops.pack_epitome(E, spec, qcfg)
+        t0 = time.perf_counter()
+        y = ops.quant_epitome_matmul(patches, None, spec, packed=packed,
+                                     interpret=True)
+        dt = (time.perf_counter() - t0) * 1e6
+        ref = patches.reshape(-1, spec.M) @ reconstruct(
+            fake_quant(E, spec, qcfg), spec)
+        err = float(jnp.abs(y.reshape(-1, spec.N) - ref).max())
+        emit(f"kernels/quant_epitome-conv-{label}-3bit", dt,
+             f"T={T};bt={bt};max_err={err:.2e}")
+
+
 def quant_epitome(emit) -> None:
     """The flagship fused path (int8-packed quantized epitome) against the
     execution ladder it replaces: reconstruct / wrapped / fp kernel.

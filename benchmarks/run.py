@@ -70,7 +70,8 @@ def main() -> None:
         "fig4": paper_tables.fig4,
         "kernels": lambda e: (kernels_bench.epitome_modes(e),
                               kernels_bench.pallas_interpret_correctness(e),
-                              kernels_bench.quant_epitome(e)),
+                              kernels_bench.quant_epitome(e),
+                              kernels_bench.conv_quant_epitome(e)),
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

@@ -46,9 +46,15 @@ chosen = ["dense" if s is None else f"{s.m}x{s.n}" for s in best]
 print("per-layer choices (first 12):", chosen[:12])
 
 # -- step 4: the JAX model actually runs with those epitomes -----------------
-m = tiny_resnet(quant_bits=3)     # reduced same-family net on CPU
-p = m.init(jax.random.PRNGKey(0))
+# the flagship serving path: every epitomized conv lowers to im2col and
+# dispatches the fused int8 Pallas kernel; prepack() stores the int8 codes
+# once so forwards are weight-stationary (no re-quantize per call)
+m = tiny_resnet(mode="kernel", quant_bits=3)   # reduced same-family net, CPU
+p0 = m.init(jax.random.PRNGKey(0))
+p = m.prepack(p0)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
 y = m.apply(p, x)
-print("tiny EPIM-ResNet forward:", y.shape, "finite:",
-      bool(jnp.all(jnp.isfinite(y))))
+ref = tiny_resnet(mode="reconstruct", quant_bits=3).apply(p0, x)
+print("tiny EPIM-ResNet fused 3-bit forward:", y.shape, "finite:",
+      bool(jnp.all(jnp.isfinite(y))),
+      f"max|y - reconstruct_ref| = {float(jnp.abs(y - ref).max()):.2e}")

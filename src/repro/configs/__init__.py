@@ -6,5 +6,6 @@ tests.  ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for
 every model input of a named input-shape cell (no allocation).
 """
 from .registry import (
-    ARCHS, SHAPES, get_config, get_smoke_config, input_specs, shape_applicable,
+    ARCHS, RESNET_ARCHS, SHAPES, get_config, get_resnet, get_smoke_config,
+    input_specs, shape_applicable,
 )

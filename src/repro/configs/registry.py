@@ -52,6 +52,34 @@ def epitome_settings(variant: str) -> EpitomeSettings:
     }[variant]
 
 
+RESNET_ARCHS = ("tiny-resnet", "resnet50", "resnet101")
+
+
+def get_resnet(arch: str = "tiny-resnet", epitome: str = "off"):
+    """ResNetModel wired to a named epitome variant (same names as
+    epitome_settings) — ``get_resnet("tiny-resnet", "kernel-q3")`` is the
+    paper's flagship EPIM-ResNet configuration at CPU-test scale: every
+    epitomized conv lowers to im2col and runs the fused int8 Pallas kernel.
+    tiny-resnet plans (8, 8) patches at CR 2 so its reduced layers still
+    epitomize; the full networks use crossbar-sized (256, 256) patches at
+    the variant's target CR."""
+    from ..models.resnet import (plan_conv_specs, resnet50, resnet101,
+                                 tiny_resnet, tiny_resnet_layers)
+    from ..pim.workloads import resnet50_layers, resnet101_layers
+    build, inventory = {
+        "tiny-resnet": (tiny_resnet, tiny_resnet_layers),
+        "resnet50": (resnet50, resnet50_layers),
+        "resnet101": (resnet101, resnet101_layers),
+    }[arch]
+    ep = epitome_settings(epitome)
+    if not ep.enabled:
+        return build(specs=None)
+    cr, patch = ((2.0, (8, 8)) if arch == "tiny-resnet"
+                 else (ep.target_cr, (256, 256)))
+    specs = plan_conv_specs(inventory(), target_cr=cr, patch=patch)
+    return build(specs, quant_bits=ep.quant_bits, mode=ep.mode)
+
+
 def get_config(arch: str, epitome: str = "off", **overrides) -> ModelConfig:
     cfg = BUILDERS[arch](epitome_settings(epitome))
     if overrides:

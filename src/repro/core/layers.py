@@ -17,6 +17,12 @@ Execution modes for an epitomized weight, in increasing optimization order:
                   epitome stays VMEM-resident across all virtual tiles
                   (beyond-paper TPU optimization; see kernels/epitome_matmul).
 
+Linear layers and convolutions share one dispatcher
+(``_dispatch_epitome_matmul``): a conv lowers to its im2col patch matrix
+(rows = output positions, cols = kh*kw*cin — the crossbar word lines) and
+then runs the identical ladder, so every mode/quant combination below is
+available to both layer kinds.
+
 Each mode composes with ``quant`` (epitome-aware quantization, §4.2).  The
 first three apply *fake* quantization — E is quantized+dequantized in fp
 before the matmul, so accuracy effects are modeled but storage/bandwidth is
@@ -113,9 +119,11 @@ def prepack_linear(params: dict, cfg: EpLayerConfig) -> dict:
 
     For a mode='kernel' x quant epitome layer, quantizes the epitome ONCE
     (int8 codes + per-block scale/zero) and stores it alongside E, so every
-    subsequent apply_linear skips re-quantizing and feeds the kernel pure
-    int8.  A no-op for every other layer kind.  Pure jnp on E, so it also
-    works under vmap over stacked param groups."""
+    subsequent apply skips re-quantizing and feeds the kernel pure int8.
+    Conv epitome params carry the same {"E": ...} structure, so this packs
+    them too (ResNetModel.prepack routes both).  A no-op for every other
+    layer kind.  Pure jnp on E, so it also works under vmap over stacked
+    param groups."""
     if not (cfg.is_epitome and cfg.quant is not None and cfg.mode == "kernel"):
         return params
     from repro.kernels.ops import pack_epitome
@@ -158,6 +166,34 @@ def effective_weight(params: dict, cfg: EpLayerConfig) -> Array:
     return W
 
 
+def _dispatch_epitome_matmul(params: dict, x: Array, cfg: EpLayerConfig) -> Array:
+    """(…, M) @ W(E) -> (…, N) through the full mode x quant matrix.
+
+    The single execution ladder shared by linear layers and (via their
+    im2col patch matrix) convolutions: reconstruct | wrapped | folded |
+    kernel | kernel x quant, each composed with fake or packed-int8
+    quantization as documented in the module docstring."""
+    E = params["E"]
+    if cfg.mode == "kernel":
+        # import here to keep layers importable without pallas
+        if cfg.quant is not None:
+            # fused path: int8 codes + per-tile dequant in the kernel;
+            # prepacked params (prepack_linear) skip the quantize step
+            packed = _packed_of(params, cfg) if "Eq" in params else None
+            return _quant_kernel_inference_only(x, E, cfg, packed)
+        from repro.kernels.ops import epitome_matmul
+        return epitome_matmul(x, E, cfg.spec)
+    if cfg.quant is not None:
+        E = fake_quant(E, cfg.spec, cfg.quant)
+    if cfg.mode == "reconstruct":
+        return epitome_matmul_ref(x, E, cfg.spec)
+    if cfg.mode == "wrapped":
+        return wrapped_matmul(x, E, cfg.spec)
+    if cfg.mode == "folded":
+        return folded_matmul(x, E, cfg.spec)
+    raise ValueError(f"unknown mode {cfg.mode}")
+
+
 def apply_linear(params: dict, x: Array, cfg: EpLayerConfig) -> Array:
     """y = x @ W (+ b), with W possibly epitome-backed and quantized."""
     if not cfg.is_epitome:
@@ -166,28 +202,7 @@ def apply_linear(params: dict, x: Array, cfg: EpLayerConfig) -> Array:
             W = fake_quant(W, None, cfg.quant)
         y = x @ W.astype(x.dtype)
     else:
-        E = params["E"]
-        if cfg.mode == "kernel":
-            # import here to keep layers importable without pallas
-            if cfg.quant is not None:
-                # fused path: int8 codes + per-tile dequant in the kernel;
-                # prepacked params (prepack_linear) skip the quantize step
-                packed = _packed_of(params, cfg) if "Eq" in params else None
-                y = _quant_kernel_inference_only(x, E, cfg, packed)
-            else:
-                from repro.kernels.ops import epitome_matmul
-                y = epitome_matmul(x, E, cfg.spec)
-        else:
-            if cfg.quant is not None:
-                E = fake_quant(E, cfg.spec, cfg.quant)
-            if cfg.mode == "reconstruct":
-                y = epitome_matmul_ref(x, E, cfg.spec)
-            elif cfg.mode == "wrapped":
-                y = wrapped_matmul(x, E, cfg.spec)
-            elif cfg.mode == "folded":
-                y = folded_matmul(x, E, cfg.spec)
-            else:
-                raise ValueError(f"unknown mode {cfg.mode}")
+        y = _dispatch_epitome_matmul(params, x, cfg)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
@@ -210,22 +225,49 @@ def init_conv(key: Array, kh: int, kw: int, cin: int, cout: int,
     return {"W": W}
 
 
+def im2col(x: Array, kh: int, kw: int, *, stride: int = 1,
+           padding: str = "SAME") -> Array:
+    """Extract conv patches as matmul rows: (N, H, W, cin) ->
+    (N, H', W', kh*kw*cin), the im2col matrix of the PIM mapping [13].
+
+    Feature columns are ordered (kh, kw, cin) to match an HWIO weight
+    flattened to (kh*kw*cin, cout) — and to match EpitomeSpec.M row order —
+    so ``im2col(x) @ W.reshape(-1, cout)`` is bit-identical to the lax
+    convolution."""
+    cin = x.shape[-1]
+    p = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches emits features channel-major (cin, kh, kw)
+    p = jnp.moveaxis(p.reshape(*p.shape[:-1], cin, kh, kw), -3, -1)
+    return p.reshape(*p.shape[:-3], kh * kw * cin)
+
+
 def apply_conv(params: dict, x: Array, kh: int, kw: int, cin: int, cout: int,
                cfg: EpLayerConfig, *, stride: int = 1, padding: str = "SAME") -> Array:
-    """Conv in crossbar space: the epitome reconstructs the im2col matrix
+    """Conv in crossbar space: the epitome stands for the im2col matrix
     (kh*kw*cin, cout) — exactly the PIM mapping [13] of rows/cols.
 
-    NOTE: unlike apply_linear, convs currently ignore cfg.mode — every mode
-    reconstructs W (with fake-quant when cfg.quant is set).  Dispatching the
-    im2col matmul through the wrapped/folded/fused-kernel paths is open
-    work; until then only linear layers get the mode='kernel' x quant int8
-    execution."""
+    Epitomized convs run the SAME execution ladder as apply_linear: the
+    input lowers to its im2col patch matrix (N, H', W', kh*kw*cin) and the
+    matmul dispatches through _dispatch_epitome_matmul, so every mode
+    (reconstruct | wrapped | folded | kernel, x fake/packed quant — incl.
+    the fused int8 kernel and prepacked serving) is available to convs.
+    The folded/kernel paths realize the paper's feature-map reuse: each
+    patch row is folded into epitome-row space once (fold_rows on the patch
+    matrix — the IFRT reuse), instead of paying the gather kh*kw times per
+    overlapping window.  mode='reconstruct' keeps the fused lax convolution
+    (bit-identical to im2col @ W, without materializing the kh*kw-times-
+    larger patch tensor — it is the paper-faithful baseline, not an
+    epitome-space path)."""
+    if cfg.is_epitome and cfg.mode != "reconstruct":
+        patches = im2col(x, kh, kw, stride=stride, padding=padding)
+        return _dispatch_epitome_matmul(params, patches, cfg)
     if cfg.is_epitome:
         E = params["E"]
         if cfg.quant is not None:
             E = fake_quant(E, cfg.spec, cfg.quant)
-        Wmat = reconstruct(E, cfg.spec)          # (kh*kw*cin, cout)
-        W = Wmat.reshape(kh, kw, cin, cout)
+        W = reconstruct(E, cfg.spec).reshape(kh, kw, cin, cout)
     else:
         W = params["W"]
         if cfg.quant is not None:

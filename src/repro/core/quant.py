@@ -108,16 +108,15 @@ def dequantize(q: Array, S: Array, Z: Array) -> Array:
 # Per-crossbar tiling
 # ---------------------------------------------------------------------------
 def _tile_reduce(x: Array, tile: int, fn) -> Array:
-    """Reduce (m, n) -> (gm, gn) per (tile x tile) block, ragged edges ok."""
+    """Reduce (m, n) -> (gm, gn) per (tile x tile) block, ragged edges ok:
+    edge-replicated padding duplicates values already inside the ragged
+    tile, so it is neutral under min/max."""
     m, n = x.shape
     gm, gn = -(-m // tile), -(-n // tile)
     pm, pn = gm * tile - m, gn * tile - n
-    pad_val = x.reshape(-1)[0]
-    xp = jnp.pad(x, ((0, pm), (0, pn)), constant_values=0.0)
-    # make padding neutral by replicating edge values
     if pm or pn:
-        xp = jnp.pad(x, ((0, pm), (0, pn)), mode="edge")
-    blocks = xp.reshape(gm, tile, gn, tile).transpose(0, 2, 1, 3)
+        x = jnp.pad(x, ((0, pm), (0, pn)), mode="edge")
+    blocks = x.reshape(gm, tile, gn, tile).transpose(0, 2, 1, 3)
     return fn(blocks, axis=(2, 3))
 
 

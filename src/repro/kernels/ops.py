@@ -27,8 +27,11 @@ _INTERPRET = jax.default_backend() == "cpu"
 
 def kernel_col_blocks(spec: EpitomeSpec) -> np.ndarray:
     """Static OFAT table: output block j <- epitome column block cb[j].
-    Requires bn-aligned column offsets (the planner's wrap_cols designs give
-    offset 0; spread designs are snapped by `aligned_spec`)."""
+    Exact only for bn-aligned column offsets (the planner's wrap_cols
+    designs give offset 0; models.resnet.plan_conv_specs emits only
+    aligned families); unaligned spread offsets are snapped to their
+    containing block — the kernel then defines its own (snapped) sampling,
+    tested against the block oracle rather than exact reconstruction."""
     offs = spec.col_offsets()
     cb = offs // spec.bn
     return cb.astype(np.int32)
@@ -44,26 +47,52 @@ def fold_rows(x: jax.Array, spec: EpitomeSpec) -> jax.Array:
 
 def epitome_matmul(x: jax.Array, E: jax.Array, spec: EpitomeSpec,
                    *, interpret: Optional[bool] = None) -> jax.Array:
-    """y = x @ W(E) via the fused epitome-space kernel."""
+    """y = x @ W(E) via the fused epitome-space kernel.
+
+    Leading dims are free-form — (B, M), (B, S, M) or a conv patch matrix
+    (N, H', W', kh*kw*cin) all flatten to (T, m) rows; the fold runs once
+    per row regardless of how many kernel windows produced it."""
     interpret = _INTERPRET if interpret is None else interpret
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
-    folded = fold_rows(x2, spec)                     # (T, m)
+    T = x2.shape[0]
+    folded, bt = _pad_rows(fold_rows(x2, spec))      # (Tp, m)
     y = epitome_matmul_blocks(folded, E.astype(x.dtype),
                               kernel_col_blocks(spec),
-                              bt=_pick_bt(folded.shape[0]),
-                              bk=_pick_bk(spec.m), bn=spec.bn,
+                              bt=bt, bk=_pick_bk(spec.m), bn=spec.bn,
                               interpret=interpret)
-    return y[:, :spec.N].reshape(*lead, spec.N)
+    return y[:T, :spec.N].reshape(*lead, spec.N)
+
+
+_BT_BLOCKS = (256, 128, 64, 32, 16, 8)
 
 
 def _pick_bt(T: int) -> int:
-    """Largest row block that divides T exactly (1 always does, so the
-    kernels never need row padding)."""
-    for bt in (256, 128, 64, 32, 16, 8, 4, 2):
+    """Row block for a T-row matmul.  Prefers the largest block that divides
+    T exactly (no padding); otherwise the largest block not exceeding T —
+    the caller pads T up to a multiple (`_pad_rows`) and trims the output.
+    A prime or odd T (e.g. N*H'*W' = 4*7*7 = 196, or T = 97) therefore
+    costs at most one partially-wasted row block instead of collapsing the
+    whole grid to bt=1."""
+    for bt in _BT_BLOCKS:
         if T % bt == 0:
             return bt
-    return 1
+    for bt in _BT_BLOCKS:
+        if bt <= T:
+            return bt
+    return _BT_BLOCKS[-1]     # T < 8: a single (padded) row block
+
+
+def _pad_rows(x2: jax.Array, bt: Optional[int] = None) -> tuple:
+    """Zero-pad the row dim of (T, m) up to a multiple of the chosen row
+    block.  Returns (padded, bt); callers slice the output back to T rows
+    (zero rows are neutral through every matmul path)."""
+    T = x2.shape[0]
+    bt = _pick_bt(T) if bt is None else bt
+    pad = (-T) % bt
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    return x2, bt
 
 
 def _pick_bk(m: int) -> int:
@@ -95,9 +124,10 @@ def quant_matmul(x, q, scales, zeros, *, interpret: Optional[bool] = None):
     interpret = _INTERPRET if interpret is None else interpret
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
-    y = _quant_matmul(x2, q, scales, zeros, bt=_pick_bt(x2.shape[0]),
-                      interpret=interpret)
-    return y.reshape(*lead, q.shape[1])
+    T = x2.shape[0]
+    x2, bt = _pad_rows(x2)
+    y = _quant_matmul(x2, q, scales, zeros, bt=bt, interpret=interpret)
+    return y[:T].reshape(*lead, q.shape[1])
 
 
 # ---------------------------------------------------------------------------
@@ -152,9 +182,10 @@ def quant_epitome_matmul(x: jax.Array, E: Optional[jax.Array],
         packed = pack_epitome(E, spec, qcfg)
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
-    folded = fold_rows(x2, spec)                     # (T, m)
+    T = x2.shape[0]
+    folded, bt = _pad_rows(fold_rows(x2, spec))      # (Tp, m)
     y = quant_epitome_matmul_blocks(
         folded.astype(x.dtype), packed.q, packed.scales, packed.zeros,
-        kernel_col_blocks(spec), bt=_pick_bt(folded.shape[0]),
+        kernel_col_blocks(spec), bt=bt,
         bk=packed.bk, bn=packed.bn, interpret=interpret)
-    return y[:, :spec.N].reshape(*lead, spec.N)
+    return y[:T, :spec.N].reshape(*lead, spec.N)

@@ -21,22 +21,28 @@ from .mesh import make_host_mesh
 def generate(params, cfg, prompts, max_len: int, gen: int,
              temperature: float = 0.0, key=None):
     """prompts: (B, P) int32.  Greedy (or sampled) generation."""
+
+    def select(logits, key):
+        # every position — including the first token after prefill —
+        # honors the temperature; greedy only when temperature == 0
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        return tok.astype(jnp.int32)[:, None], key
+
     B, P = prompts.shape
     state = lm.init_decode_state(cfg, B, max_len)
     logits, state = jax.jit(
         lambda p, t, s: lm.prefill(p, t, s, cfg))(params, prompts, state)
 
     step = jax.jit(lambda p, s, t, pos: lm.decode_step(p, s, t, pos, cfg))
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    tok, key = select(logits[:, -1], key)
     out = [tok]
     for i in range(gen - 1):
         logits, state = step(params, state, tok, jnp.int32(P + i))
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[:, -1] / temperature
-                                         ).astype(jnp.int32)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok, key = select(logits[:, -1], key)
         out.append(tok)
     return jnp.concatenate(out, axis=1), state
 
@@ -50,18 +56,24 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples every generated token")
     args = ap.parse_args()
 
     cfg = (get_smoke_config(args.arch, args.epitome) if args.smoke
            else get_config(args.arch, args.epitome))
     set_mesh(make_host_mesh(data=len(jax.devices())))
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init_params(key, cfg)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len),
+    # independent streams for params / prompts / sampling (one shared key
+    # would correlate the prompt draw with the weight init)
+    init_key, prompt_key, sample_key = jax.random.split(
+        jax.random.PRNGKey(args.seed), 3)
+    params = lm.init_params(init_key, cfg)
+    prompts = jax.random.randint(prompt_key, (args.batch, args.prompt_len),
                                  0, cfg.vocab)
     t0 = time.perf_counter()
     toks, _ = generate(params, cfg, prompts,
-                       args.prompt_len + args.gen + 1, args.gen, key=key)
+                       args.prompt_len + args.gen + 1, args.gen,
+                       temperature=args.temperature, key=sample_key)
     jax.block_until_ready(toks)
     dt = time.perf_counter() - t0
     print(f"[serve] {args.arch} epitome={args.epitome}: generated "

@@ -3,7 +3,10 @@
 Layer geometry comes from the same single source of truth the PIM simulator
 uses (`pim.workloads`), so #XB counts, epitome specs and the JAX model can
 never drift apart.  Convolutions are epitomized in crossbar space
-(rows = kh*kw*cin, cols = cout) exactly per the mapping [13].
+(rows = kh*kw*cin, cols = cout) exactly per the mapping [13] and dispatch
+through the same execution ladder as linears (reconstruct | wrapped |
+folded | kernel, x quant — incl. the fused int8 kernel and weight-
+stationary prepack) via their im2col patch matrix.
 
 BatchNorm runs in batch-stats mode (we never do full ImageNet training
 offline; the smoke tests train on synthetic data — DESIGN.md §7).
@@ -27,6 +30,40 @@ Array = jax.Array
 def _ep_cfg(spec: Optional[EpitomeSpec], quant_bits: int, mode: str) -> EpLayerConfig:
     q = QuantConfig(bits=quant_bits) if quant_bits else None
     return EpLayerConfig(spec=spec, mode=mode, quant=q)
+
+
+def plan_conv_specs(layers: Sequence[LayerShape], target_cr: float = 2.0,
+                    patch: tuple = (8, 8)) -> List[Optional[EpitomeSpec]]:
+    """Kernel-exact epitome specs for a LayerShape inventory.
+
+    Column designs are restricted to the bn-aligned families — wrap
+    (n == bn, every output block samples epitome block 0) or identity
+    (n == N, distinct aligned blocks) — so the kernel modes' OFAT
+    col-block table samples exactly the same W as ``reconstruct``; row
+    offsets stay unrestricted because fold_rows is exact for any row map.
+    Layers too small to compress stay dense (None), mirroring the paper
+    keeping small ResNet layers un-epitomized."""
+    bm0, bn0 = patch
+    specs: List[Optional[EpitomeSpec]] = []
+    for l in layers:
+        M, N = l.rows, l.cols
+        bm, bn = min(bm0, M), min(bn0, N)
+        total, budget = M * N, M * N / target_cr
+        n_cands = {bn} | ({N} if N % bn == 0 else set())
+        best, best_err = None, math.inf
+        for n in n_cands:
+            m_f = budget / n
+            for m in {max(bm, int(m_f) // bm * bm),
+                      max(bm, -(-int(m_f) // bm) * bm), M}:
+                m = min(m, M)
+                if m * n >= total:
+                    continue
+                s = EpitomeSpec(M=M, N=N, m=m, n=n, bm=bm, bn=bn)
+                err = abs(s.compression_rate - target_cr) / target_cr
+                if err < best_err:
+                    best, best_err = s, err
+        specs.append(best)
+    return specs
 
 
 class ResNetModel:
@@ -58,18 +95,22 @@ class ResNetModel:
         return params
 
     def prepack(self, params: Dict[str, Any]) -> Dict[str, Any]:
-        """Inference prepack of the *fc* layers: quantize kernel x quant
-        epitome linears once (int8 codes + per-block scale/zero) so apply()
-        skips re-quantizing them every forward.  Conv layers are untouched —
-        apply_conv always reconstructs W from the (fake-quantized) epitome
-        regardless of mode; routing convs through the fused kernel via
-        im2col is future work.  No-op for other modes."""
+        """Inference prepack for weight-stationary serving: every kernel x
+        quant epitome layer — fc AND conv — is quantized once (int8 codes +
+        per-block scale/zero) so apply() feeds the fused kernel pure int8
+        instead of re-quantizing each forward.  Conv epitomes carry the same
+        {"E": ...} param structure as linears, so prepack_linear packs both.
+        No-op for other modes."""
         from ..core.layers import prepack_linear
         out = dict(params)
         for l, spec in zip(self.layers, self.specs):
+            cfg = _ep_cfg(spec, self.quant_bits, self.mode)
             if l.kind == "fc":
-                cfg = _ep_cfg(spec, self.quant_bits, self.mode)
                 out[l.name] = prepack_linear(params[l.name], cfg)
+            else:
+                grp = dict(params[l.name])
+                grp["conv"] = prepack_linear(params[l.name]["conv"], cfg)
+                out[l.name] = grp
         return out
 
     def _conv_bn(self, p, x, l: LayerShape, spec, act=True):
@@ -118,9 +159,9 @@ def resnet101(specs=None, **kw) -> ResNetModel:
     return ResNetModel(resnet101_layers(), specs, **kw)
 
 
-def tiny_resnet(specs=None, **kw) -> ResNetModel:
-    """Reduced same-family network for CPU tests: conv1 + 2 bottlenecks."""
-    layers = [
+def tiny_resnet_layers() -> List[LayerShape]:
+    """Reduced same-family inventory for CPU tests: conv1 + 2 bottlenecks."""
+    return [
         LayerShape("conv1", 3, 3, 3, 16, 16, 2),
         LayerShape("layer1.0.conv1", 1, 1, 16, 16, 16),
         LayerShape("layer1.0.conv2", 3, 3, 16, 16, 16),
@@ -131,4 +172,16 @@ def tiny_resnet(specs=None, **kw) -> ResNetModel:
         LayerShape("layer1.1.conv3", 1, 1, 16, 64, 16),
         LayerShape("fc", 1, 1, 64, 10, 1, kind="fc"),
     ]
+
+
+def tiny_resnet(specs="auto", **kw) -> ResNetModel:
+    """Reduced same-family network for CPU tests: conv1 + 2 bottlenecks.
+
+    ``specs="auto"`` (the default) plans small (8, 8)-patch kernel-exact
+    epitomes for every layer, so ``tiny_resnet(mode="kernel", quant_bits=3)``
+    executes the paper's flagship configuration end to end on CPU; pass
+    ``specs=None`` for a fully dense model."""
+    layers = tiny_resnet_layers()
+    if isinstance(specs, str) and specs == "auto":
+        specs = plan_conv_specs(layers, target_cr=2.0, patch=(8, 8))
     return ResNetModel(layers, specs, **kw)

@@ -237,20 +237,41 @@ class TestQuantEpitomeMatmul:
 
 
 class TestPickBt:
-    def test_divides(self):
-        for T in (1, 2, 3, 5, 7, 10, 12, 24, 96, 100, 256, 384, 1000):
-            bt = ops._pick_bt(T)
-            assert 1 <= bt <= 256 and T % bt == 0, (T, bt)
-
-    def test_prefers_largest_divisor(self):
+    def test_exact_divisor_preferred(self):
+        """When a block divides T, no padding is needed and the largest
+        such block wins."""
         assert ops._pick_bt(512) == 256
         assert ops._pick_bt(96) == 32
-        assert ops._pick_bt(7) == 1
+        assert ops._pick_bt(1024) == 256
 
-    @pytest.mark.parametrize("T", [12, 96])
-    def test_non_pow2_T_both_kernel_paths(self, T):
-        """Non-power-of-two row counts go through both the fp and the
-        quantized epitome kernels without padding artifacts."""
+    def test_no_degenerate_grids(self):
+        """The performance cliff: prime/odd T must NOT collapse the grid to
+        bt=1 row blocks — callers pad up to a block multiple instead."""
+        for T in (1, 2, 3, 5, 7, 97, 193, 196, 1000):
+            bt = ops._pick_bt(T)
+            assert bt >= 8, (T, bt)
+            # padding waste is bounded by one block
+            assert (-T) % bt < bt
+
+    def test_resnet_conv_row_counts(self):
+        """N*H'*W' row counts of the paper's ResNet convs (batch 1 and 4)
+        all get real row blocks."""
+        for hw in (112, 56, 28, 14, 7):
+            for batch in (1, 4):
+                T = batch * hw * hw
+                assert ops._pick_bt(T) >= 8, (T, ops._pick_bt(T))
+
+    def test_pad_rows_shape_and_trim(self):
+        x = jnp.ones((196, 16))
+        xp, bt = ops._pad_rows(x)
+        assert xp.shape[0] % bt == 0 and xp.shape[0] >= 196
+        assert bool(jnp.all(xp[196:] == 0.0))      # zero rows, trimmed later
+
+    @pytest.mark.parametrize("T", [12, 96, 97, 196])
+    def test_non_divisible_T_both_kernel_paths(self, T):
+        """Odd/prime row counts go through both the fp and the quantized
+        epitome kernels padded, with the output trimmed back to T rows and
+        no padding artifacts."""
         from repro.core.quant import QuantConfig
         spec = EpitomeSpec(**ALIGNED)
         E = jax.random.normal(KEY, (spec.m, spec.n))

@@ -43,6 +43,31 @@ class TestRanges:
             assert bool(jnp.all(a < b))
 
 
+class TestTileReduceRaggedEdge:
+    def test_ragged_tiles_min_max_neutral(self):
+        """Regression for the dead constant-0 pad that used to sit (always
+        overwritten) in _tile_reduce: on a ragged (m, n) not a multiple of
+        the tile, every per-tile min/max must equal reducing the unpadded
+        tile directly.  A constant-0 pad would fake a min of 0 into the
+        edge tiles of an all-positive tensor (and a max of 0 for an
+        all-negative one); edge replication is neutral."""
+        from repro.core.quant import per_crossbar_range
+        x = jax.random.uniform(KEY, (37, 29), minval=1.0, maxval=2.0)
+        cfg = QuantConfig(tile=16)
+        mn, mx = per_crossbar_range(x, cfg)
+        assert mn.shape == (3, 2) == mx.shape
+        for i in range(3):
+            for j in range(2):
+                blk = x[i * 16:(i + 1) * 16, j * 16:(j + 1) * 16]
+                assert float(mn[i, j]) == float(blk.min()), (i, j)
+                assert float(mx[i, j]) == float(blk.max()), (i, j)
+        # all-negative tensor: a 0-pad would have corrupted the max side
+        mn2, mx2 = per_crossbar_range(-x, cfg)
+        assert float(mx2.max()) < 0.0
+        np.testing.assert_allclose(np.asarray(mn2), -np.asarray(mx))
+        np.testing.assert_allclose(np.asarray(mx2), -np.asarray(mn))
+
+
 class TestTable2Ordering:
     """Naive < +crossbar < +overlap (in accuracy <=> reversed in MSE)."""
 
