@@ -128,6 +128,31 @@ def conv_quant_epitome(emit) -> None:
              f"T={T};bt={bt};max_err={err:.2e}")
 
 
+def legalized_plan(emit) -> None:
+    """The plan pipeline's CI smoke: tiny evo search -> legalize -> JSON
+    round-trip -> fused int8 forward on the planned specs.  The derived
+    column carries the simulator's prediction next to the measured wall
+    time plus the legalization snap error — the predicted-vs-measured
+    contract of the plan -> legalize -> execute pipeline."""
+    from benchmarks.paper_tables import _measured_wall_s
+    from repro.pim.evo import EvoConfig
+    from repro.pim.plan import EpitomePlan, legalize_plan, search_plan
+
+    plan = search_plan("tiny-resnet", objective="latency", weight_bits=3,
+                       act_bits=9,
+                       evo=EvoConfig(population=12, iterations=6, seed=0))
+    legal = legalize_plan(plan)
+    rt = EpitomePlan.from_json(legal.to_json())        # JSON round-trip
+    assert rt.to_dict() == legal.to_dict(), "plan round-trip drifted"
+    wall = _measured_wall_s(rt, batch=2, hw=16)
+    p = legal.predicted
+    emit("kernels/plan-evo-latency-q3", wall * 1e6,
+         f"pred_ms={p['latency_s']*1e3:.4f};pred_mj={p['energy_j']*1e3:.4f};"
+         f"xbars={p['xbars']};snap_err_max={legal.snap_err_max:.3f};"
+         f"meas_ms={wall*1e3:.1f};"
+         f"epitomized={legal.n_epitomized}/{len(legal.layers)}")
+
+
 def quant_epitome(emit) -> None:
     """The flagship fused path (int8-packed quantized epitome) against the
     execution ladder it replaces: reconstruct / wrapped / fp kernel.

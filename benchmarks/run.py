@@ -71,7 +71,8 @@ def main() -> None:
         "kernels": lambda e: (kernels_bench.epitome_modes(e),
                               kernels_bench.pallas_interpret_correctness(e),
                               kernels_bench.quant_epitome(e),
-                              kernels_bench.conv_quant_epitome(e)),
+                              kernels_bench.conv_quant_epitome(e),
+                              kernels_bench.legalized_plan(e)),
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

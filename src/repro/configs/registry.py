@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -55,17 +56,54 @@ def epitome_settings(variant: str) -> EpitomeSettings:
 RESNET_ARCHS = ("tiny-resnet", "resnet50", "resnet101")
 
 
-def get_resnet(arch: str = "tiny-resnet", epitome: str = "off"):
+@functools.lru_cache(maxsize=None)
+def _evo_variant(arch: str, epitome: str):
+    """Plan-pipeline registry names: ``evo-<objective>[-q<bits>]`` (e.g.
+    ``evo-latency-q3``) runs the Algorithm-1 search, legalizes the result
+    to the kernel-exact families, and builds the model from that plan.
+    Cached: the search is deterministic under its fixed seed, so repeat
+    get_resnet calls reuse the plan instead of re-searching."""
+    from ..pim.evo import EvoConfig
+    from ..pim.plan import legalize_plan, search_plan
+    body = epitome[len("evo-"):]
+    parts = body.split("-")
+    bits = None
+    if parts and parts[-1].startswith("q") and parts[-1][1:].isdigit():
+        bits = int(parts.pop()[1:])
+    objective = "-".join(parts)
+    if objective not in ("latency", "energy", "edp"):
+        raise KeyError(f"unknown evo variant {epitome!r} "
+                       "(expected evo-{latency|energy|edp}[-q<bits>])")
+    plan = search_plan(arch, objective=objective, weight_bits=bits,
+                       act_bits=9 if bits else None,
+                       evo=EvoConfig(population=16, iterations=8, seed=0))
+    return legalize_plan(plan)
+
+
+def get_resnet(arch: str = "tiny-resnet", epitome: str = "off", plan=None):
     """ResNetModel wired to a named epitome variant (same names as
     epitome_settings) — ``get_resnet("tiny-resnet", "kernel-q3")`` is the
     paper's flagship EPIM-ResNet configuration at CPU-test scale: every
     epitomized conv lowers to im2col and runs the fused int8 Pallas kernel.
     tiny-resnet plans (8, 8) patches at CR 2 so its reduced layers still
     epitomize; the full networks use crossbar-sized (256, 256) patches at
-    the variant's target CR."""
-    from ..models.resnet import (plan_conv_specs, resnet50, resnet101,
-                                 tiny_resnet, tiny_resnet_layers)
+    the variant's target CR.
+
+    Plan pipeline entry points: pass ``plan=`` (an EpitomePlan or a saved
+    plan JSON path) to build exactly that design, or use the searched
+    variants ``epitome="evo-latency-q3"`` etc. (see _evo_variant)."""
+    from ..models.resnet import (ResNetModel, plan_conv_specs, resnet50,
+                                 resnet101, tiny_resnet, tiny_resnet_layers)
     from ..pim.workloads import resnet50_layers, resnet101_layers
+    if plan is not None:
+        from ..pim.plan import EpitomePlan
+        if isinstance(plan, str):
+            plan = EpitomePlan.load(plan)
+        if plan.arch != arch:
+            raise ValueError(f"plan is for {plan.arch!r}, requested {arch!r}")
+        return ResNetModel.from_plan(plan)
+    if epitome.startswith("evo-"):
+        return ResNetModel.from_plan(_evo_variant(arch, epitome))
     build, inventory = {
         "tiny-resnet": (tiny_resnet, tiny_resnet_layers),
         "resnet50": (resnet50, resnet50_layers),

@@ -28,7 +28,7 @@ _INTERPRET = jax.default_backend() == "cpu"
 def kernel_col_blocks(spec: EpitomeSpec) -> np.ndarray:
     """Static OFAT table: output block j <- epitome column block cb[j].
     Exact only for bn-aligned column offsets (the planner's wrap_cols
-    designs give offset 0; models.resnet.plan_conv_specs emits only
+    designs give offset 0; pim.plan.plan_conv_specs emits only
     aligned families); unaligned spread offsets are snapped to their
     containing block — the kernel then defines its own (snapped) sampling,
     tested against the block oracle rather than exact reconstruction."""

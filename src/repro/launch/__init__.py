@@ -1,2 +1,3 @@
 """Launchers: production mesh, multi-pod dry-run, roofline analysis,
-runnable train/serve drivers."""
+runnable train/serve drivers, and the EpitomePlan CLI
+(`python -m repro.launch.plan` — search | legalize | show | run)."""

@@ -1,0 +1,172 @@
+"""EpitomePlan driver: search | legalize | show | run.
+
+The plan -> legalize -> execute pipeline from the CLI:
+
+  # Algorithm-1 evolution search, saved as a JSON plan artifact
+  PYTHONPATH=src python -m repro.launch.plan search --arch tiny-resnet \
+      --objective latency --weight-bits 3 --out plan.json
+
+  # snap the searched specs to the kernel-exact families + re-simulate
+  PYTHONPATH=src python -m repro.launch.plan legalize --plan plan.json \
+      --out plan_legal.json
+
+  # inspect a plan (per-layer spec / bits / snap error + predicted cost)
+  PYTHONPATH=src python -m repro.launch.plan show --plan plan_legal.json
+
+  # run the planned model end to end through the fused int8 kernel and
+  # report predicted (PIM simulator) vs measured (wall clock) latency
+  PYTHONPATH=src python -m repro.launch.plan run --plan plan_legal.json
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _load(path: str):
+    from ..pim.plan import EpitomePlan
+    return EpitomePlan.load(path)
+
+
+def _fmt_spec(spec) -> str:
+    if spec is None:
+        return "dense"
+    return (f"{spec.m}x{spec.n} (of {spec.M}x{spec.N}, "
+            f"patch {spec.bm}x{spec.bn}, CR {spec.compression_rate:.2f})")
+
+
+def cmd_search(args) -> None:
+    from ..pim.evo import EvoConfig
+    from ..pim.plan import search_plan
+    evo = EvoConfig(population=args.population, iterations=args.iterations,
+                    seed=args.seed)
+    plan = search_plan(args.arch, objective=args.objective,
+                       weight_bits=args.weight_bits or None,
+                       act_bits=args.act_bits or None, evo=evo)
+    plan.save(args.out)
+    pred = plan.predicted
+    print(f"[plan] searched {args.arch} ({args.objective}, "
+          f"pop={args.population} x {args.iterations} iters): "
+          f"{plan.n_epitomized}/{len(plan.layers)} layers epitomized, "
+          f"predicted {pred['latency_s']*1e3:.3f}ms / "
+          f"{pred['energy_j']*1e3:.3f}mJ / {pred['xbars']} XBs")
+    print(f"[plan] saved -> {args.out}  (NOT legalized; run "
+          f"`legalize --plan {args.out}` before executing)")
+
+
+def cmd_legalize(args) -> None:
+    from ..pim.plan import legalize_plan
+    plan = _load(args.plan)
+    patch = tuple(int(v) for v in args.patch.split("x")) if args.patch else None
+    legal = legalize_plan(plan, patch=patch)
+    legal.save(args.out)
+    pred = legal.predicted
+    print(f"[plan] legalized {plan.arch}: snap error "
+          f"max={legal.snap_err_max:.3f} "
+          f"mean={legal.snap_err_mean:.3f}; re-simulated "
+          f"{pred['latency_s']*1e3:.3f}ms / {pred['energy_j']*1e3:.3f}mJ / "
+          f"{pred['xbars']} XBs")
+    print(f"[plan] saved -> {args.out}")
+
+
+def cmd_show(args) -> None:
+    plan = _load(args.plan)
+    prov = plan.provenance
+    print(f"plan: arch={plan.arch} planner={prov.get('planner')} "
+          f"objective={prov.get('objective', '-')} "
+          f"legalized={plan.is_legalized()}")
+    if plan.predicted:
+        p = plan.predicted
+        print(f"predicted: latency={p['latency_s']*1e3:.3f}ms "
+              f"energy={p['energy_j']*1e3:.3f}mJ xbars={p['xbars']} "
+              f"util={p['utilization']*100:.1f}%")
+    print(f"{'layer':<18} {'bits':>4} {'mode':<11} {'snap':>6}  spec")
+    for lp in plan.layers:
+        print(f"{lp.name:<18} {lp.weight_bits or '-':>4} {lp.mode:<11} "
+              f"{lp.snap_err:>6.3f}  {_fmt_spec(lp.spec)}")
+
+
+def cmd_run(args) -> None:
+    import jax
+    import jax.numpy as jnp
+    from ..models.resnet import ResNetModel
+
+    plan = _load(args.plan)
+    if not plan.is_legalized():
+        raise SystemExit(f"plan {args.plan} is not legalized; searched specs "
+                         "are not kernel-exact — run `legalize` first")
+    model = ResNetModel.from_plan(plan)
+    # the contract of the pipeline: what runs IS what was planned
+    assert model.specs == plan.specs(), \
+        "specs in the running model drifted from the plan"
+    print(f"[plan] {plan.arch}: mode={model.mode} "
+          f"{plan.n_epitomized}/{len(plan.layers)} layers epitomized, "
+          f"specs byte-identical to plan: True")
+    key = jax.random.PRNGKey(args.seed)
+    params = model.prepack(model.init(key))
+    x = jax.random.normal(jax.random.PRNGKey(args.seed + 1),
+                          (args.batch, args.hw, args.hw, 3))
+    apply = jax.jit(model.apply)
+    y = jax.block_until_ready(apply(params, x))       # compile + warm up
+    t0 = time.perf_counter()
+    for _ in range(args.iters):
+        y = apply(params, x)
+    jax.block_until_ready(y)
+    wall = (time.perf_counter() - t0) / args.iters
+    assert bool(jnp.all(jnp.isfinite(y))), "non-finite logits"
+    pred = plan.predicted or {}
+    pred_ms = pred.get("latency_s", float("nan")) * 1e3
+    print(f"[plan] predicted (PIM simulator): {pred_ms:.3f}ms "
+          f"/ {pred.get('energy_j', float('nan'))*1e3:.3f}mJ "
+          f"/ {pred.get('xbars', '-')} XBs")
+    print(f"[plan] measured  (this host, batch={args.batch} "
+          f"hw={args.hw}): {wall*1e3:.1f}ms wall per forward "
+          f"(interpret-mode Pallas on CPU measures Python, not hardware)")
+    print(f"[plan] logits {tuple(y.shape)} finite: True")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="repro.launch.plan", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    s = sub.add_parser("search", help="evolution-search a design -> plan JSON")
+    s.add_argument("--arch", default="tiny-resnet")
+    s.add_argument("--objective", default="latency",
+                   choices=("latency", "energy", "edp"))
+    s.add_argument("--weight-bits", type=int, default=0,
+                   help="0 = fp weights; e.g. 3 for the flagship W3 rows")
+    s.add_argument("--act-bits", type=int, default=0,
+                   help="0 = fp activations (simulator-side only)")
+    s.add_argument("--population", type=int, default=16)
+    s.add_argument("--iterations", type=int, default=8)
+    s.add_argument("--seed", type=int, default=0)
+    s.add_argument("--out", default="plan.json")
+    s.set_defaults(fn=cmd_search)
+
+    s = sub.add_parser("legalize",
+                       help="snap a plan to the kernel-exact families")
+    s.add_argument("--plan", required=True)
+    s.add_argument("--patch", default="",
+                   help="execution patch 'BMxBN' (default: per-arch)")
+    s.add_argument("--out", default="plan_legal.json")
+    s.set_defaults(fn=cmd_legalize)
+
+    s = sub.add_parser("show", help="print a plan")
+    s.add_argument("--plan", required=True)
+    s.set_defaults(fn=cmd_show)
+
+    s = sub.add_parser("run",
+                       help="execute a legalized plan through the fused kernel")
+    s.add_argument("--plan", required=True)
+    s.add_argument("--batch", type=int, default=2)
+    s.add_argument("--hw", type=int, default=16, help="input spatial size")
+    s.add_argument("--iters", type=int, default=2)
+    s.add_argument("--seed", type=int, default=0)
+    s.set_defaults(fn=cmd_run)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

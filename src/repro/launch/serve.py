@@ -7,6 +7,7 @@ CPU-scale example:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -18,33 +19,61 @@ from ..models.common import set_mesh
 from .mesh import make_host_mesh
 
 
+def _select(logits, key, temperature, sampled: bool):
+    # every position — including the first token after prefill — honors
+    # the temperature; greedy only when temperature == 0.  Only the
+    # greedy-vs-sampled branch is trace-static; the temperature value
+    # itself stays traced so sweeping it never recompiles.
+    if sampled:
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(
+            sub, logits / temperature.astype(logits.dtype))
+    else:
+        tok = jnp.argmax(logits, axis=-1)
+    return tok.astype(jnp.int32)[:, None], key
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill(params, prompts, state, cfg):
+    return lm.prefill(params, prompts, state, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "P", "gen", "sampled"))
+def _decode_all(params, state, tok, key, temperature, *, cfg, P, gen,
+                sampled):
+    """The whole decode loop as one ``lax.scan`` over the decode state —
+    one dispatch per generation instead of one per token (the Python loop
+    paid a host round-trip per step).  Module-level jit keyed on the
+    static (cfg, P, gen, sampled) so repeated generate calls reuse the
+    compiled program instead of re-tracing."""
+    def body(carry, i):
+        state, tok, key = carry
+        logits, state = lm.decode_step(params, state, tok,
+                                       (P + i).astype(jnp.int32), cfg)
+        tok, key = _select(logits[:, -1], key, temperature, sampled)
+        return (state, tok, key), tok[:, 0]
+
+    (state, _, _), toks = jax.lax.scan(
+        body, (state, tok, key), jnp.arange(gen - 1))
+    return toks, state
+
+
 def generate(params, cfg, prompts, max_len: int, gen: int,
              temperature: float = 0.0, key=None):
-    """prompts: (B, P) int32.  Greedy (or sampled) generation."""
+    """prompts: (B, P) int32.  Greedy (or sampled) generation.
 
-    def select(logits, key):
-        # every position — including the first token after prefill —
-        # honors the temperature; greedy only when temperature == 0
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        return tok.astype(jnp.int32)[:, None], key
-
+    Sampling semantics are bit-compatible with the old per-token Python
+    loop: the key splits once per generated token in the same order, and
+    every position honors the temperature (greedy when 0)."""
     B, P = prompts.shape
+    sampled = temperature > 0
+    temp = jnp.float32(temperature)
     state = lm.init_decode_state(cfg, B, max_len)
-    logits, state = jax.jit(
-        lambda p, t, s: lm.prefill(p, t, s, cfg))(params, prompts, state)
-
-    step = jax.jit(lambda p, s, t, pos: lm.decode_step(p, s, t, pos, cfg))
-    tok, key = select(logits[:, -1], key)
-    out = [tok]
-    for i in range(gen - 1):
-        logits, state = step(params, state, tok, jnp.int32(P + i))
-        tok, key = select(logits[:, -1], key)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1), state
+    logits, state = _prefill(params, prompts, state, cfg)
+    tok, key = _select(logits[:, -1], key, temp, sampled)
+    toks, state = _decode_all(params, state, tok, key, temp, cfg=cfg, P=P,
+                              gen=gen, sampled=sampled)
+    return jnp.concatenate([tok, toks.T], axis=1), state
 
 
 def main():

@@ -8,13 +8,18 @@ through the same execution ladder as linears (reconstruct | wrapped |
 folded | kernel, x quant — incl. the fused int8 kernel and weight-
 stationary prepack) via their im2col patch matrix.
 
+Deployment designs arrive as `pim.plan.EpitomePlan` artifacts:
+``ResNetModel.from_plan(plan)`` builds the model with exactly the plan's
+per-layer specs and weight bits, so what the evo search chose (after
+legalization) is byte-identical to what runs.  `plan_conv_specs` — the
+kernel-exact spec designer — now lives in `pim.plan` (re-exported here).
+
 BatchNorm runs in batch-stats mode (we never do full ImageNet training
 offline; the smoke tests train on synthetic data — DESIGN.md §7).
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +27,9 @@ import jax.numpy as jnp
 from ..core.epitome import EpitomeSpec
 from ..core.layers import EpLayerConfig, apply_conv, init_conv, init_linear, apply_linear
 from ..core.quant import QuantConfig
-from ..pim.workloads import LayerShape, resnet50_layers, resnet101_layers
+from ..pim.plan import EpitomePlan, inventory_for, plan_conv_specs  # noqa: F401 (re-export)
+from ..pim.workloads import (LayerShape, resnet50_layers, resnet101_layers,
+                             tiny_resnet_layers)  # noqa: F401 (re-export)
 
 Array = jax.Array
 
@@ -32,58 +39,52 @@ def _ep_cfg(spec: Optional[EpitomeSpec], quant_bits: int, mode: str) -> EpLayerC
     return EpLayerConfig(spec=spec, mode=mode, quant=q)
 
 
-def plan_conv_specs(layers: Sequence[LayerShape], target_cr: float = 2.0,
-                    patch: tuple = (8, 8)) -> List[Optional[EpitomeSpec]]:
-    """Kernel-exact epitome specs for a LayerShape inventory.
-
-    Column designs are restricted to the bn-aligned families — wrap
-    (n == bn, every output block samples epitome block 0) or identity
-    (n == N, distinct aligned blocks) — so the kernel modes' OFAT
-    col-block table samples exactly the same W as ``reconstruct``; row
-    offsets stay unrestricted because fold_rows is exact for any row map.
-    Layers too small to compress stay dense (None), mirroring the paper
-    keeping small ResNet layers un-epitomized."""
-    bm0, bn0 = patch
-    specs: List[Optional[EpitomeSpec]] = []
-    for l in layers:
-        M, N = l.rows, l.cols
-        bm, bn = min(bm0, M), min(bn0, N)
-        total, budget = M * N, M * N / target_cr
-        n_cands = {bn} | ({N} if N % bn == 0 else set())
-        best, best_err = None, math.inf
-        for n in n_cands:
-            m_f = budget / n
-            for m in {max(bm, int(m_f) // bm * bm),
-                      max(bm, -(-int(m_f) // bm) * bm), M}:
-                m = min(m, M)
-                if m * n >= total:
-                    continue
-                s = EpitomeSpec(M=M, N=N, m=m, n=n, bm=bm, bn=bn)
-                err = abs(s.compression_rate - target_cr) / target_cr
-                if err < best_err:
-                    best, best_err = s, err
-        specs.append(best)
-    return specs
-
-
 class ResNetModel:
-    """Functional ResNet built from a LayerShape inventory."""
+    """Functional ResNet built from a LayerShape inventory.
+
+    ``quant_bits`` is an int (uniform) or a per-layer sequence (what a
+    mixed-precision EpitomePlan carries); 0/None entries mean fp weights."""
 
     def __init__(self, layers: Sequence[LayerShape],
                  specs: Optional[Sequence[Optional[EpitomeSpec]]] = None,
-                 quant_bits: int = 0, mode: str = "reconstruct",
+                 quant_bits: Union[int, Sequence[Optional[int]]] = 0,
+                 mode: str = "reconstruct",
                  width_scale: float = 1.0, num_classes: int = 0):
         self.layers = list(layers)
         self.specs = list(specs) if specs is not None else [None] * len(layers)
         self.quant_bits = quant_bits
+        if isinstance(quant_bits, (list, tuple)):
+            if len(quant_bits) != len(self.layers):
+                raise ValueError(f"{len(quant_bits)} quant_bits entries for "
+                                 f"{len(self.layers)} layers")
+            self.layer_bits = [int(b) if b else 0 for b in quant_bits]
+        else:
+            self.layer_bits = [int(quant_bits or 0)] * len(self.layers)
         self.mode = mode
         self.num_classes = num_classes or self.layers[-1].cout
+
+    @classmethod
+    def from_plan(cls, plan: EpitomePlan, **kw) -> "ResNetModel":
+        """Build the model an EpitomePlan describes — specs and weight bits
+        byte-identical to the plan record (the execute end of the
+        plan -> legalize -> execute pipeline)."""
+        layers = inventory_for(plan.arch)()
+        names = [l.name for l in layers]
+        got = [lp.name for lp in plan.layers]
+        if names != got:
+            raise ValueError(f"plan layers {got} do not match the "
+                             f"{plan.arch} inventory {names}")
+        return cls(layers, plan.specs(), quant_bits=plan.bits(),
+                   mode=plan.uniform_mode(), **kw)
+
+    def _cfgs(self):
+        return [(_ep_cfg(s, b, self.mode))
+                for s, b in zip(self.specs, self.layer_bits)]
 
     def init(self, key: Array, dtype=jnp.float32) -> Dict[str, Any]:
         params: Dict[str, Any] = {}
         keys = jax.random.split(key, len(self.layers))
-        for i, (l, spec) in enumerate(zip(self.layers, self.specs)):
-            cfg = _ep_cfg(spec, self.quant_bits, self.mode)
+        for i, (l, cfg) in enumerate(zip(self.layers, self._cfgs())):
             if l.kind == "fc":
                 params[l.name] = init_linear(keys[i], l.rows, l.cols, cfg, dtype=dtype)
             else:
@@ -103,8 +104,7 @@ class ResNetModel:
         No-op for other modes."""
         from ..core.layers import prepack_linear
         out = dict(params)
-        for l, spec in zip(self.layers, self.specs):
-            cfg = _ep_cfg(spec, self.quant_bits, self.mode)
+        for l, cfg in zip(self.layers, self._cfgs()):
             if l.kind == "fc":
                 out[l.name] = prepack_linear(params[l.name], cfg)
             else:
@@ -113,8 +113,7 @@ class ResNetModel:
                 out[l.name] = grp
         return out
 
-    def _conv_bn(self, p, x, l: LayerShape, spec, act=True):
-        cfg = _ep_cfg(spec, self.quant_bits, self.mode)
+    def _conv_bn(self, p, x, l: LayerShape, cfg: EpLayerConfig, act=True):
         y = apply_conv(p["conv"], x, l.kh, l.kw, l.cin, l.cout, cfg,
                        stride=l.stride, padding="SAME")
         mean = y.mean(axis=(0, 1, 2))
@@ -124,9 +123,10 @@ class ResNetModel:
 
     def apply(self, params: Dict[str, Any], x: Array) -> Array:
         """x: (N, H, W, 3) -> logits (N, num_classes)."""
-        by_name = {l.name: (l, s) for l, s in zip(self.layers, self.specs)}
-        l, s = by_name["conv1"]
-        x = self._conv_bn(params["conv1"], x, l, s)
+        by_name = {l.name: (l, cfg)
+                   for l, cfg in zip(self.layers, self._cfgs())}
+        l, cfg = by_name["conv1"]
+        x = self._conv_bn(params["conv1"], x, l, cfg)
         x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                                   (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
         # walk bottleneck blocks in inventory order
@@ -135,19 +135,19 @@ class ResNetModel:
                                    key=lambda b: names.index(b + ".conv1"))
         for b in blocks:
             residual = x
-            l1, s1 = by_name[f"{b}.conv1"]
-            l2, s2 = by_name[f"{b}.conv2"]
-            l3, s3 = by_name[f"{b}.conv3"]
-            h = self._conv_bn(params[f"{b}.conv1"], x, l1, s1)
-            h = self._conv_bn(params[f"{b}.conv2"], h, l2, s2)
-            h = self._conv_bn(params[f"{b}.conv3"], h, l3, s3, act=False)
+            l1, c1 = by_name[f"{b}.conv1"]
+            l2, c2 = by_name[f"{b}.conv2"]
+            l3, c3 = by_name[f"{b}.conv3"]
+            h = self._conv_bn(params[f"{b}.conv1"], x, l1, c1)
+            h = self._conv_bn(params[f"{b}.conv2"], h, l2, c2)
+            h = self._conv_bn(params[f"{b}.conv3"], h, l3, c3, act=False)
             if f"{b}.down" in by_name:
-                ld, sd = by_name[f"{b}.down"]
-                residual = self._conv_bn(params[f"{b}.down"], residual, ld, sd, act=False)
+                ld, cd = by_name[f"{b}.down"]
+                residual = self._conv_bn(params[f"{b}.down"], residual, ld, cd,
+                                         act=False)
             x = jax.nn.relu(h + residual)
         x = x.mean(axis=(1, 2))                       # global average pool
-        l, s = by_name["fc"]
-        cfg = _ep_cfg(s, self.quant_bits, self.mode)
+        _, cfg = by_name["fc"]
         return apply_linear(params["fc"], x, cfg)
 
 
@@ -157,21 +157,6 @@ def resnet50(specs=None, **kw) -> ResNetModel:
 
 def resnet101(specs=None, **kw) -> ResNetModel:
     return ResNetModel(resnet101_layers(), specs, **kw)
-
-
-def tiny_resnet_layers() -> List[LayerShape]:
-    """Reduced same-family inventory for CPU tests: conv1 + 2 bottlenecks."""
-    return [
-        LayerShape("conv1", 3, 3, 3, 16, 16, 2),
-        LayerShape("layer1.0.conv1", 1, 1, 16, 16, 16),
-        LayerShape("layer1.0.conv2", 3, 3, 16, 16, 16),
-        LayerShape("layer1.0.conv3", 1, 1, 16, 64, 16),
-        LayerShape("layer1.0.down", 1, 1, 16, 64, 16),
-        LayerShape("layer1.1.conv1", 1, 1, 64, 16, 16),
-        LayerShape("layer1.1.conv2", 3, 3, 16, 16, 16),
-        LayerShape("layer1.1.conv3", 1, 1, 16, 64, 16),
-        LayerShape("fc", 1, 1, 64, 10, 1, kind="fc"),
-    ]
 
 
 def tiny_resnet(specs="auto", **kw) -> ResNetModel:

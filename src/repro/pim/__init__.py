@@ -3,9 +3,16 @@
 Reproduces the paper's evaluation substrate: crossbar mapping / #XB counting
 (xbar.py), latency & energy lookup tables (tables.py), the end-to-end
 simulator with IFAT/IFRT/OFAT + channel-wrapping effects (simulator.py), and
-the Algorithm-1 evolution search (evo.py).
+the Algorithm-1 evolution search (evo.py).  plan.py turns every design path
+into a serializable EpitomePlan and legalizes searched specs to the
+kernel-exact families so they execute through the fused Pallas kernels.
 """
-from .xbar import MappingConfig, count_crossbars, layer_crossbars
-from .workloads import resnet50_layers, resnet101_layers, LayerShape
+from .xbar import MappingConfig, count_crossbars, layer_crossbars, make_spec
+from .workloads import (LayerShape, resnet50_layers, resnet101_layers,
+                        tiny_resnet_layers)
 from .simulator import PimSimulator, SimResult
-from .evo import EvoConfig, evolution_search
+from .evo import EvoConfig, encode_individual, evolution_search
+from .plan import (EpitomePlan, LayerPlan, PlanSchemaError, auto_plan,
+                   is_kernel_exact, legalize_plan, legalize_spec,
+                   plan_conv_specs, plan_from_specs, search_plan,
+                   uniform_plan, validate_plan_dict)

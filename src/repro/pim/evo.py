@@ -11,6 +11,7 @@ integer vectors indexing each layer's candidate list.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -18,7 +19,7 @@ import numpy as np
 from ..core.epitome import EpitomeSpec
 from .simulator import PimSimulator, SimResult
 from .workloads import LayerShape
-from .xbar import MappingConfig, count_crossbars
+from .xbar import MappingConfig, count_crossbars, make_spec
 
 
 @dataclasses.dataclass
@@ -35,15 +36,7 @@ class EvoConfig:
 def all_layer_uniform_specs(layers: Sequence[LayerShape], m: int, n: int,
                             cfg: MappingConfig) -> List[Optional[EpitomeSpec]]:
     """Fig-4 style uniform design: every layer that shrinks gets (m, n)."""
-    out: List[Optional[EpitomeSpec]] = []
-    for l in layers:
-        em, en = min(m, l.rows), min(n, l.cols)
-        if em * en >= l.rows * l.cols:
-            out.append(None)
-            continue
-        bm, bn = min(cfg.xb_rows, em), min(cfg.xb_cols, en)
-        out.append(EpitomeSpec(M=l.rows, N=l.cols, m=em, n=en, bm=bm, bn=bn))
-    return out
+    return [make_spec(l, m, n, cfg) for l in layers]
 
 
 def candidate_specs(layer: LayerShape, cfg: MappingConfig,
@@ -52,12 +45,49 @@ def candidate_specs(layer: LayerShape, cfg: MappingConfig,
     actually shrinks the layer."""
     cands: List[Optional[EpitomeSpec]] = [None]
     for (m, n) in shapes:
-        em, en = min(m, layer.rows), min(n, layer.cols)
-        if em * en >= layer.rows * layer.cols:
-            continue
-        bm, bn = min(cfg.xb_rows, em), min(cfg.xb_cols, en)
-        cands.append(EpitomeSpec(M=layer.rows, N=layer.cols, m=em, n=en, bm=bm, bn=bn))
+        s = make_spec(layer, m, n, cfg)
+        if s is not None and s not in cands:
+            cands.append(s)
     return cands
+
+
+def encode_individual(specs: Sequence[Optional[EpitomeSpec]],
+                      candidates: Sequence[Sequence[Optional[EpitomeSpec]]]
+                      ) -> np.ndarray:
+    """Genes for a seed design: the index of each layer's spec in its
+    candidate list.
+
+    Matches the FULL spec first (so two candidates differing only in patch
+    geometry stay distinct), then exact (m, n); a seed spec missing from the
+    candidate list falls back to the *nearest* candidate by (m, n) distance
+    — with a warning — instead of silently degrading to gene 0 (dense),
+    which used to drop known-good seeds from {P}_0 entirely."""
+    ind = np.zeros(len(specs), dtype=np.int64)
+    for i, s in enumerate(specs):
+        cands = candidates[i]
+        if s is None:
+            ind[i] = next(g for g, c in enumerate(cands) if c is None)
+            continue
+        exact = next((g for g, c in enumerate(cands) if c == s), None)
+        if exact is None:
+            exact = next((g for g, c in enumerate(cands)
+                          if c is not None and c.m == s.m and c.n == s.n), None)
+        if exact is not None:
+            ind[i] = exact
+            continue
+        shaped = [(g, c) for g, c in enumerate(cands) if c is not None]
+        if not shaped:
+            warnings.warn(
+                f"seed spec ({s.m}x{s.n}) for layer {i} has no epitome "
+                f"candidate at all; seeding dense", stacklevel=2)
+            continue
+        g, c = min(shaped,
+                   key=lambda gc: (gc[1].m - s.m) ** 2 + (gc[1].n - s.n) ** 2)
+        warnings.warn(
+            f"seed spec ({s.m}x{s.n}) for layer {i} is not a candidate; "
+            f"seeding nearest candidate ({c.m}x{c.n})", stacklevel=2)
+        ind[i] = g
+    return ind
 
 
 def _reward(sim: SimResult, objective: str) -> float:
@@ -95,18 +125,8 @@ def evolution_search(
         m = 1.0 if sim.xbars <= budget_xbars else 0.0          # Eq. 7
         return m * _reward(sim, cfg.objective), sim             # Eq. 6
 
-    def encode(specs: Sequence[Optional[EpitomeSpec]]) -> np.ndarray:
-        ind = np.zeros(n_layers, dtype=np.int64)
-        for i, s in enumerate(specs):
-            for g, c in enumerate(candidates[i]):
-                if (c is None and s is None) or (
-                        c is not None and s is not None and c.m == s.m and c.n == s.n):
-                    ind[i] = g
-                    break
-        return ind
-
     # {P}_0.init(): seeds (uniform/known designs) + random individuals
-    pop = [encode(s) for s in (seeds or [])]
+    pop = [encode_individual(s, candidates) for s in (seeds or [])]
     pop += [rng.integers(0, sizes) for _ in range(cfg.population - len(pop))]
     best_curve: List[float] = []
     best_ind, best_r, best_sim = None, -1.0, None

@@ -1,0 +1,491 @@
+"""EpitomePlan — the repo's central plan -> legalize -> execute artifact.
+
+The paper's layer-wise design method (Algorithm 1) produces per-layer
+epitome shapes, but a searched design is only useful if it can *run*: the
+fused Pallas kernels are exact only for the bn-aligned column families
+(wrap: n == bn, every output block samples epitome block 0; identity:
+n == N with N % bn == 0, distinct aligned blocks — row offsets stay free
+because fold_rows is exact for any row map).  This module closes that loop,
+PIMCOMP-style:
+
+  * ``EpitomePlan`` — a serializable (JSON, schema-checked) record of one
+    deployment design: per-layer {spec, weight_bits, mode} + provenance +
+    the simulator's predicted latency/energy/#XB.  Every planner emits one:
+    ``uniform_plan`` (the paper's 1024x256 design), ``auto_plan`` (the
+    kernel-exact CR-targeted designer, ex models.resnet.plan_conv_specs),
+    and ``search_plan`` (Algorithm-1 evolution search).
+  * ``legalize_plan`` — snaps any searched spec to the kernel-exact
+    families at the target execution patch, reporting the per-layer snap
+    error (relative epitome-area change) and re-simulating the cost, so
+    every plan can execute through the fused int8 kernel, not just
+    reconstruct.
+  * ``ResNetModel.from_plan`` / ``configs.get_resnet(..., plan=...)`` /
+    ``launch/plan.py`` consume plans and run them end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from ..core.epitome import EpitomeSpec
+from .evo import EvoConfig, candidate_specs, evolution_search
+from .simulator import PimSimulator, SimResult, default_calibrated_simulator
+from .workloads import (LayerShape, resnet50_layers, resnet101_layers,
+                        tiny_resnet_layers)
+from .xbar import MappingConfig, count_crossbars, uniform_epitome_specs
+
+PLAN_VERSION = 1
+MODES = ("reconstruct", "wrapped", "folded", "kernel")
+
+INVENTORIES = {
+    "tiny-resnet": tiny_resnet_layers,
+    "resnet50": resnet50_layers,
+    "resnet101": resnet101_layers,
+}
+
+# Execution patch per arch: the (bm, bn) the legalizer / auto planner snap
+# to.  tiny runs (8, 8) so its reduced layers still epitomize; the full
+# networks use the crossbar geometry (128 word lines x 256 bit lines).
+EXEC_PATCH = {
+    "tiny-resnet": (8, 8),
+    "resnet50": (128, 256),
+    "resnet101": (128, 256),
+}
+
+# Default candidate (m, n) shape menus for the evolution search.
+SEARCH_SHAPES = {
+    "tiny-resnet": [(128, 16), (96, 16), (72, 16), (64, 16), (96, 12),
+                    (48, 12), (96, 8), (64, 8), (32, 8), (16, 8)],
+    "resnet50": [(1024, 256), (512, 256), (2048, 256), (256, 256),
+                 (1024, 128), (512, 128)],
+    "resnet101": [(1024, 256), (512, 256), (2048, 256), (256, 256),
+                  (1024, 128), (512, 128)],
+}
+
+
+def inventory_for(arch: str):
+    """LayerShape inventory builder for a plan's arch (fails loudly)."""
+    try:
+        return INVENTORIES[arch]
+    except KeyError:
+        raise ValueError(f"unknown plan arch {arch!r}; "
+                         f"known: {sorted(INVENTORIES)}") from None
+
+
+def simulator_for(arch: str) -> PimSimulator:
+    """Default simulator per arch.  The full networks use the simulator
+    calibrated on the paper's Table-1 anchors; tiny-resnet scales the
+    crossbar down to its (8, 8) execution patch — with 128x256 crossbars
+    every tiny layer fits one tile and the #XB budget never binds, so the
+    search would degenerate to all-dense."""
+    if arch == "tiny-resnet":
+        return PimSimulator(MappingConfig(xb_rows=8, xb_cols=8))
+    return default_calibrated_simulator()
+
+
+# ---------------------------------------------------------------------------
+# The plan artifact
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's deployment record: what runs, at which bits, how."""
+    name: str
+    spec: Optional[EpitomeSpec]
+    weight_bits: Optional[int] = None     # None -> fp weights
+    mode: str = "kernel"
+    snap_err: float = 0.0                 # relative epitome-area change at
+                                          # legalization (0 = untouched)
+
+
+@dataclasses.dataclass
+class EpitomePlan:
+    arch: str
+    layers: List[LayerPlan]
+    provenance: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    predicted: Optional[Dict[str, float]] = None   # SimResult.summary()
+    version: int = PLAN_VERSION
+
+    # -- views --------------------------------------------------------------
+    def specs(self) -> List[Optional[EpitomeSpec]]:
+        return [lp.spec for lp in self.layers]
+
+    def bits(self) -> List[Optional[int]]:
+        return [lp.weight_bits for lp in self.layers]
+
+    def uniform_mode(self) -> str:
+        modes = {lp.mode for lp in self.layers}
+        if len(modes) != 1:
+            raise ValueError(f"plan mixes execution modes {sorted(modes)}; "
+                             "the JAX model runs one mode network-wide")
+        return next(iter(modes))
+
+    @property
+    def n_epitomized(self) -> int:
+        return sum(lp.spec is not None for lp in self.layers)
+
+    @property
+    def snap_err_max(self) -> float:
+        return max((lp.snap_err for lp in self.layers), default=0.0)
+
+    @property
+    def snap_err_mean(self) -> float:
+        if not self.layers:
+            return 0.0
+        return sum(lp.snap_err for lp in self.layers) / len(self.layers)
+
+    def is_legalized(self) -> bool:
+        return bool(self.provenance.get("legalized", False))
+
+    # -- (de)serialization --------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "version": self.version,
+            "arch": self.arch,
+            "provenance": self.provenance,
+            "predicted": self.predicted,
+            "layers": [
+                {"name": lp.name, "spec": _spec_to_dict(lp.spec),
+                 "weight_bits": lp.weight_bits, "mode": lp.mode,
+                 "snap_err": float(lp.snap_err)}
+                for lp in self.layers
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EpitomePlan":
+        validate_plan_dict(d)
+        plan = cls(
+            arch=d["arch"],
+            layers=[LayerPlan(r["name"], _spec_from_dict(r["spec"]),
+                              r["weight_bits"], r["mode"],
+                              float(r["snap_err"]))
+                    for r in d["layers"]],
+            provenance=d["provenance"],
+            predicted=d["predicted"],
+            version=d["version"],
+        )
+        inventory = inventory_for(plan.arch)()
+        names = [l.name for l in inventory]
+        got = [lp.name for lp in plan.layers]
+        if names != got:
+            raise PlanSchemaError(
+                f"plan layer names drifted from the {plan.arch} inventory: "
+                f"expected {names}, got {got}")
+        for l, lp in zip(inventory, plan.layers):
+            if lp.spec is not None and (lp.spec.M, lp.spec.N) != (l.rows, l.cols):
+                raise PlanSchemaError(
+                    f"plan spec for {lp.name} covers a ({lp.spec.M}, "
+                    f"{lp.spec.N}) weight but the {plan.arch} inventory "
+                    f"has ({l.rows}, {l.cols})")
+        return plan
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "EpitomePlan":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        validate_plan_dict(self.to_dict())    # never persist a broken plan
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "EpitomePlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def _spec_to_dict(s: Optional[EpitomeSpec]) -> Optional[Dict[str, int]]:
+    if s is None:
+        return None
+    return {"M": s.M, "N": s.N, "m": s.m, "n": s.n, "bm": s.bm, "bn": s.bn}
+
+
+def _spec_from_dict(d: Optional[Dict[str, int]]) -> Optional[EpitomeSpec]:
+    if d is None:
+        return None
+    return EpitomeSpec(M=int(d["M"]), N=int(d["N"]), m=int(d["m"]),
+                       n=int(d["n"]), bm=int(d["bm"]), bn=int(d["bn"]))
+
+
+# ---------------------------------------------------------------------------
+# Schema check — saved plans fail loudly on drift
+# ---------------------------------------------------------------------------
+class PlanSchemaError(ValueError):
+    pass
+
+
+_PLAN_KEYS = {"version", "arch", "provenance", "predicted", "layers"}
+_LAYER_KEYS = {"name", "spec", "weight_bits", "mode", "snap_err"}
+_SPEC_KEYS = {"M", "N", "m", "n", "bm", "bn"}
+_PREDICTED_KEYS = {"latency_s", "energy_j", "edp", "xbars", "utilization"}
+
+
+def validate_plan_dict(d: Any) -> None:
+    """Structural schema check of a plan dict (exact keys, types, and the
+    EpitomeSpec invariants).  Raises PlanSchemaError with the offending
+    path, so a drifted JSON fails loudly instead of mis-building a model."""
+    def fail(path: str, msg: str) -> None:
+        raise PlanSchemaError(f"plan schema violation at {path}: {msg}")
+
+    def expect_keys(obj: Any, keys: set, path: str) -> None:
+        if not isinstance(obj, dict):
+            fail(path, f"expected object, got {type(obj).__name__}")
+        if set(obj) != keys:
+            missing, extra = keys - set(obj), set(obj) - keys
+            fail(path, f"missing keys {sorted(missing)}, "
+                       f"unknown keys {sorted(extra)}")
+
+    expect_keys(d, _PLAN_KEYS, "$")
+    if d["version"] != PLAN_VERSION:
+        fail("$.version", f"expected {PLAN_VERSION}, got {d['version']!r}")
+    if d["arch"] not in INVENTORIES:
+        fail("$.arch", f"unknown arch {d['arch']!r}")
+    if not isinstance(d["provenance"], dict):
+        fail("$.provenance", "expected object")
+    if d["predicted"] is not None:
+        expect_keys(d["predicted"], _PREDICTED_KEYS, "$.predicted")
+        for k, v in d["predicted"].items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(f"$.predicted.{k}", f"expected number, got {v!r}")
+    if not isinstance(d["layers"], list) or not d["layers"]:
+        fail("$.layers", "expected non-empty array")
+    for i, r in enumerate(d["layers"]):
+        p = f"$.layers[{i}]"
+        expect_keys(r, _LAYER_KEYS, p)
+        if not isinstance(r["name"], str) or not r["name"]:
+            fail(f"{p}.name", f"expected non-empty string, got {r['name']!r}")
+        if r["mode"] not in MODES:
+            fail(f"{p}.mode", f"expected one of {MODES}, got {r['mode']!r}")
+        wb = r["weight_bits"]
+        if wb is not None and (not isinstance(wb, int) or isinstance(wb, bool)
+                               or not 1 <= wb <= 16):
+            fail(f"{p}.weight_bits", f"expected null or int in [1, 16], "
+                                     f"got {wb!r}")
+        se = r["snap_err"]
+        if not isinstance(se, (int, float)) or isinstance(se, bool) or se < 0:
+            fail(f"{p}.snap_err", f"expected number >= 0, got {se!r}")
+        s = r["spec"]
+        if s is None:
+            continue
+        expect_keys(s, _SPEC_KEYS, f"{p}.spec")
+        for k, v in s.items():
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                fail(f"{p}.spec.{k}", f"expected positive int, got {v!r}")
+        if not (s["m"] <= s["M"] and s["n"] <= s["N"]
+                and s["bm"] <= s["m"] and s["bn"] <= s["n"]):
+            fail(f"{p}.spec", f"violates bm <= m <= M / bn <= n <= N: {s}")
+
+
+# ---------------------------------------------------------------------------
+# Kernel-exact (bn-aligned) spec families + legalization
+# ---------------------------------------------------------------------------
+def is_kernel_exact(spec: EpitomeSpec) -> bool:
+    """The fused kernels' OFAT col-block table samples exactly the same W
+    as ``reconstruct`` iff every column offset is bn-aligned (row offsets
+    are always free: fold_rows is exact for any row map)."""
+    return bool((spec.col_offsets() % spec.bn == 0).all())
+
+
+def _aligned_candidates(M: int, N: int, area: float,
+                        patch: Tuple[int, int]) -> Iterator[EpitomeSpec]:
+    """Kernel-exact specs for an (M, N) layer near a target epitome area:
+    column designs restricted to wrap (n == bn) / identity (n == N) and row
+    counts near area/n (bm multiples plus the exact value)."""
+    bm0, bn0 = patch
+    bm, bn = min(bm0, M), min(bn0, N)
+    n_cands = {bn} | ({N} if N % bn == 0 else set())
+    for n in sorted(n_cands):
+        m_t = area / n
+        for m in {max(bm, int(m_t) // bm * bm),
+                  max(bm, -(-int(m_t) // bm) * bm),
+                  max(bm, int(round(m_t))),
+                  M}:
+            m = min(m, M)
+            if m * n >= M * N:          # not actually smaller -> not a spec
+                continue
+            yield EpitomeSpec(M=M, N=N, m=m, n=n, bm=bm, bn=bn)
+
+
+def legalize_spec(layer: LayerShape, spec: Optional[EpitomeSpec],
+                  patch: Tuple[int, int]
+                  ) -> Tuple[Optional[EpitomeSpec], float]:
+    """Snap one searched spec to the nearest kernel-exact family at the
+    execution patch.  Returns (legal spec, relative epitome-area change).
+    Dense stays dense; a layer with no legal compressed family goes dense
+    with the area growth reported as its snap error."""
+    if spec is None:
+        return None, 0.0
+    M, N = layer.rows, layer.cols
+    area = spec.m * spec.n
+    best, best_err = None, math.inf
+    for cand in _aligned_candidates(M, N, area, patch):
+        err = abs(cand.m * cand.n - area) / area
+        if err < best_err:
+            best, best_err = cand, err
+    if best is None:
+        return None, abs(M * N - area) / area
+    assert is_kernel_exact(best), best
+    return best, best_err
+
+
+def legalize_plan(plan: EpitomePlan, *,
+                  patch: Optional[Tuple[int, int]] = None,
+                  simulator: Optional[PimSimulator] = None,
+                  wrapping: bool = True) -> EpitomePlan:
+    """The legalization pass: every spec snaps to a kernel-exact family,
+    per-layer snap errors are recorded, and the cost is re-simulated so the
+    plan's prediction describes the design that will actually run."""
+    layers = inventory_for(plan.arch)()
+    patch = tuple(patch or EXEC_PATCH[plan.arch])
+    out: List[LayerPlan] = []
+    for l, lp in zip(layers, plan.layers):
+        legal, err = legalize_spec(l, lp.spec, patch)
+        out.append(dataclasses.replace(lp, spec=legal, snap_err=err))
+    legal_plan = EpitomePlan(
+        arch=plan.arch, layers=out,
+        provenance={**plan.provenance, "legalized": True,
+                    "patch": list(patch)})
+    sim = simulator or simulator_for(plan.arch)
+    legal_plan.predicted = sim.simulate_plan(
+        legal_plan, wrapping=wrapping,
+        act_bits=plan.provenance.get("act_bits")).summary()
+    return legal_plan
+
+
+# ---------------------------------------------------------------------------
+# Planners — every design path emits an EpitomePlan
+# ---------------------------------------------------------------------------
+def plan_conv_specs(layers: Sequence[LayerShape], target_cr: float = 2.0,
+                    patch: Tuple[int, int] = (8, 8)
+                    ) -> List[Optional[EpitomeSpec]]:
+    """Kernel-exact epitome specs for a LayerShape inventory (ex
+    models.resnet; the spec-level designer under ``auto_plan``).
+
+    Column designs are restricted to the bn-aligned families — wrap
+    (n == bn, every output block samples epitome block 0) or identity
+    (n == N, distinct aligned blocks) — so the kernel modes' OFAT
+    col-block table samples exactly the same W as ``reconstruct``; row
+    offsets stay unrestricted because fold_rows is exact for any row map.
+    Layers too small to compress stay dense (None), mirroring the paper
+    keeping small ResNet layers un-epitomized."""
+    specs: List[Optional[EpitomeSpec]] = []
+    for l in layers:
+        budget = l.rows * l.cols / target_cr
+        best, best_err = None, math.inf
+        for s in _aligned_candidates(l.rows, l.cols, budget, patch):
+            err = abs(s.compression_rate - target_cr) / target_cr
+            if err < best_err:
+                best, best_err = s, err
+        specs.append(best)
+    return specs
+
+
+def plan_from_specs(arch: str, specs: Sequence[Optional[EpitomeSpec]], *,
+                    weight_bits: Optional[int] = None, mode: str = "kernel",
+                    planner: str = "manual",
+                    simulator: Optional[PimSimulator] = None,
+                    act_bits: Optional[int] = None, wrapping: bool = True,
+                    provenance: Optional[Dict[str, Any]] = None
+                    ) -> EpitomePlan:
+    """Wrap a bare spec list into a plan: provenance + simulated cost."""
+    layers = inventory_for(arch)()
+    if len(specs) != len(layers):
+        raise ValueError(f"{len(specs)} specs for {len(layers)} layers")
+    plan = EpitomePlan(
+        arch=arch,
+        layers=[LayerPlan(l.name, s, weight_bits, mode)
+                for l, s in zip(layers, specs)],
+        provenance={"planner": planner, "act_bits": act_bits,
+                    "legalized": False, **(provenance or {})})
+    sim = simulator or simulator_for(arch)
+    plan.predicted = sim.simulate_plan(plan, wrapping=wrapping,
+                                       act_bits=act_bits).summary()
+    return plan
+
+
+def uniform_plan(arch: str, m: int = 1024, n: int = 256, *,
+                 weight_bits: Optional[int] = None, mode: str = "kernel",
+                 simulator: Optional[PimSimulator] = None,
+                 act_bits: Optional[int] = None) -> EpitomePlan:
+    """The paper's uniform design (e.g. "1024x256") as a plan."""
+    sim = simulator or simulator_for(arch)
+    specs = uniform_epitome_specs(inventory_for(arch)(), m, n, sim.mapping)
+    return plan_from_specs(arch, specs, weight_bits=weight_bits, mode=mode,
+                           planner="uniform_epitome_specs", simulator=sim,
+                           act_bits=act_bits,
+                           provenance={"uniform_shape": [m, n]})
+
+
+def auto_plan(arch: str, target_cr: float = 2.0, *,
+              patch: Optional[Tuple[int, int]] = None,
+              weight_bits: Optional[int] = None, mode: str = "kernel",
+              simulator: Optional[PimSimulator] = None,
+              act_bits: Optional[int] = None) -> EpitomePlan:
+    """CR-targeted kernel-exact design (what tiny_resnet specs='auto' and
+    the registry variants run) as a plan.  Born legal: snap error 0."""
+    patch = tuple(patch or EXEC_PATCH[arch])
+    specs = plan_conv_specs(inventory_for(arch)(), target_cr=target_cr,
+                            patch=patch)
+    plan = plan_from_specs(arch, specs, weight_bits=weight_bits, mode=mode,
+                           planner="plan_conv_specs", simulator=simulator,
+                           act_bits=act_bits,
+                           provenance={"target_cr": target_cr,
+                                       "patch": list(patch),
+                                       "legalized": True})
+    return plan
+
+
+def search_plan(arch: str, *, objective: str = "latency",
+                weight_bits: Optional[int] = None,
+                act_bits: Optional[int] = None,
+                shapes: Optional[Sequence[Tuple[int, int]]] = None,
+                budget_xbars: Optional[int] = None,
+                evo: Optional[EvoConfig] = None, mode: str = "kernel",
+                simulator: Optional[PimSimulator] = None,
+                seed_plan: Optional[EpitomePlan] = None) -> EpitomePlan:
+    """Algorithm-1 evolution search, emitted as a plan.
+
+    Seeds {P}_0 with ``seed_plan`` (default: the auto_plan design, which
+    also sets the crossbar budget so the search optimizes cost at matched
+    area).  The searched specs are generally NOT kernel-exact — run the
+    result through ``legalize_plan`` before executing it."""
+    layers = inventory_for(arch)()
+    sim = simulator or simulator_for(arch)
+    cfg = dataclasses.replace(evo or EvoConfig(), objective=objective)
+    shapes = list(shapes or SEARCH_SHAPES[arch])
+    cands = [candidate_specs(l, sim.mapping, shapes) for l in layers]
+
+    if seed_plan is None:
+        seed_specs = plan_conv_specs(layers, patch=EXEC_PATCH[arch])
+    else:
+        if seed_plan.arch != arch:
+            raise ValueError(f"seed plan is for {seed_plan.arch}, not {arch}")
+        seed_specs = seed_plan.specs()
+    # the gene space must be able to express the seed design exactly
+    for i, s in enumerate(seed_specs):
+        if s is not None and s not in cands[i]:
+            cands[i].append(s)
+
+    wb = None if weight_bits is None else [weight_bits] * len(layers)
+    if budget_xbars is None:
+        budget_xbars = count_crossbars(layers, sim.mapping, seed_specs, wb)
+    best, simres, curve = evolution_search(
+        layers, cands, sim, budget_xbars, cfg, weight_bits=wb,
+        seeds=[seed_specs], act_bits=act_bits)
+    return EpitomePlan(
+        arch=arch,
+        layers=[LayerPlan(l.name, s, weight_bits, mode)
+                for l, s in zip(layers, best)],
+        provenance={"planner": "evolution_search", "objective": cfg.objective,
+                    "seed": cfg.seed, "population": cfg.population,
+                    "iterations": cfg.iterations,
+                    "budget_xbars": int(budget_xbars),
+                    "act_bits": act_bits, "shapes": [list(s) for s in shapes],
+                    "best_curve": [float(r) for r in curve],
+                    "legalized": False},
+        predicted=simres.summary())

@@ -69,6 +69,17 @@ class SimResult:
     def edp(self) -> float:
         return self.latency * self.energy
 
+    def summary(self) -> dict:
+        """JSON-ready cost record — what an EpitomePlan stores as its
+        predicted cost (plan.py round-trips exactly these keys)."""
+        return {
+            "latency_s": float(self.latency),
+            "energy_j": float(self.energy),
+            "edp": float(self.edp),
+            "xbars": int(self.xbars),
+            "utilization": float(self.utilization),
+        }
+
     def __str__(self) -> str:
         return (f"latency={self.latency*1e3:.1f}ms energy={self.energy*1e3:.1f}mJ "
                 f"EDP={self.edp*1e6:.2f} xbars={self.xbars} util={self.utilization*100:.1f}%")
@@ -167,6 +178,15 @@ class PimSimulator:
         xbars = sum(c.X for c in cs)
         util = utilization(layers, self.mapping, specs, weight_bits)
         return SimResult(latency, energy, xbars, util, cs)
+
+    def simulate_plan(self, plan, *, wrapping: bool = True,
+                      act_bits: Optional[int] = None) -> SimResult:
+        """Simulate an EpitomePlan against its own arch inventory — the
+        cost every planner stamps into ``plan.predicted``."""
+        from .plan import inventory_for
+        layers = inventory_for(plan.arch)()
+        return self.simulate(layers, plan.specs(), plan.bits(),
+                             wrapping=wrapping, act_bits=act_bits)
 
 
 # ---------------------------------------------------------------------------

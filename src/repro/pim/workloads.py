@@ -74,3 +74,22 @@ def resnet50_layers() -> List[LayerShape]:
 
 def resnet101_layers() -> List[LayerShape]:
     return _resnet([3, 4, 23, 3])
+
+
+def tiny_resnet_layers() -> List[LayerShape]:
+    """Reduced same-family inventory for CPU tests: conv1 + 2 bottlenecks.
+
+    Lives here (not in models/) so the planners — which consume only
+    LayerShape geometry — can target the CPU-scale network without pulling
+    in jax; models.resnet re-exports it and builds the matching JAX model."""
+    return [
+        LayerShape("conv1", 3, 3, 3, 16, 16, 2),
+        LayerShape("layer1.0.conv1", 1, 1, 16, 16, 16),
+        LayerShape("layer1.0.conv2", 3, 3, 16, 16, 16),
+        LayerShape("layer1.0.conv3", 1, 1, 16, 64, 16),
+        LayerShape("layer1.0.down", 1, 1, 16, 64, 16),
+        LayerShape("layer1.1.conv1", 1, 1, 64, 16, 16),
+        LayerShape("layer1.1.conv2", 3, 3, 16, 16, 16),
+        LayerShape("layer1.1.conv3", 1, 1, 16, 64, 16),
+        LayerShape("fc", 1, 1, 64, 10, 1, kind="fc"),
+    ]

@@ -104,8 +104,14 @@ def utilization(layers: Sequence[LayerShape], cfg: MappingConfig,
 # ---------------------------------------------------------------------------
 # Epitome assignment for a whole network (the "epitome designer", Fig. 2a)
 # ---------------------------------------------------------------------------
-def _make_spec(l: LayerShape, m: int, n: int, cfg: MappingConfig) -> EpitomeSpec:
+def make_spec(l: LayerShape, m: int, n: int,
+              cfg: MappingConfig) -> Optional[EpitomeSpec]:
+    """The one spec constructor every planner shares: clamp the requested
+    (m, n) to the layer, patch at crossbar geometry, and return None when
+    the epitome would not actually be smaller than the weight."""
     em, en = min(m, l.rows), min(n, l.cols)
+    if em * en >= l.rows * l.cols:
+        return None
     bm, bn = min(cfg.xb_rows, em), min(cfg.xb_cols, en)
     return EpitomeSpec(M=l.rows, N=l.cols, m=em, n=en, bm=bm, bn=bn)
 
@@ -122,9 +128,5 @@ def uniform_epitome_specs(layers: Sequence[LayerShape], m: int, n: int,
     out: List[Optional[EpitomeSpec]] = []
     for l in layers:
         use = l.rows >= m or l.cols == 1024
-        em, en = min(m, l.rows), min(n, l.cols)
-        if not use or em * en >= l.rows * l.cols:
-            out.append(None)
-            continue
-        out.append(_make_spec(l, m, n, cfg))
+        out.append(make_spec(l, m, n, cfg) if use else None)
     return out

@@ -1,0 +1,214 @@
+"""The plan -> legalize -> execute pipeline (pim/plan.py):
+
+evo-search determinism under a fixed seed, monotone best_curve, the
+encode() seed regression (nearest candidate instead of silent dense),
+legalization to the kernel-exact families, JSON round-trip / schema
+drift, and kernel x q3 execution parity of a legalized evo plan.
+All fast-lane: searches run on the tiny inventory with small populations.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.epitome import EpitomeSpec
+from repro.pim.evo import EvoConfig, candidate_specs, encode_individual
+from repro.pim.plan import (
+    EXEC_PATCH, EpitomePlan, LayerPlan, PlanSchemaError, auto_plan,
+    inventory_for, is_kernel_exact, legalize_plan, legalize_spec,
+    plan_conv_specs, search_plan, simulator_for, uniform_plan,
+    validate_plan_dict,
+)
+from repro.pim.workloads import LayerShape, tiny_resnet_layers
+
+EVO = EvoConfig(population=10, iterations=5, seed=0)
+
+
+def _tiny_search(seed=0, objective="latency"):
+    return search_plan("tiny-resnet", objective=objective, weight_bits=3,
+                       act_bits=9,
+                       evo=dataclasses.replace(EVO, seed=seed))
+
+
+class TestEncodeRegression:
+    """pim/evo.encode_individual: seeds missing from the candidate list
+    used to silently map to gene 0 (dense), dropping the seed design."""
+
+    def setup_method(self):
+        self.layer = LayerShape("conv", 3, 3, 64, 128, 14)
+        cfg = simulator_for("resnet50").mapping
+        self.cands = candidate_specs(self.layer, cfg,
+                                     [(256, 64), (128, 64), (128, 128)])
+
+    def test_exact_full_spec_match(self):
+        seed = [self.cands[2]]
+        ind = encode_individual(seed, [self.cands])
+        assert ind[0] == 2
+
+    def test_dense_seed(self):
+        assert encode_individual([None], [self.cands])[0] == 0
+
+    def test_missing_seed_maps_to_nearest_not_dense(self):
+        # (120, 60) is not a candidate; nearest by (m, n) is (128, 64)
+        seed_spec = EpitomeSpec(M=576, N=128, m=120, n=60, bm=8, bn=8)
+        with pytest.warns(UserWarning, match="nearest candidate"):
+            ind = encode_individual([seed_spec], [self.cands])
+        assert ind[0] != 0                       # NOT silently dense
+        chosen = self.cands[ind[0]]
+        assert (chosen.m, chosen.n) == (128, 64)
+
+    def test_same_shape_different_patch_matches_shape(self):
+        # full-spec mismatch but (m, n) present -> exact shape gene, no warn
+        c = self.cands[1]
+        seed_spec = EpitomeSpec(M=c.M, N=c.N, m=c.m, n=c.n, bm=8, bn=8)
+        ind = encode_individual([seed_spec], [self.cands])
+        assert (self.cands[ind[0]].m, self.cands[ind[0]].n) == (c.m, c.n)
+
+
+class TestEvoDeterminism:
+    def test_same_seed_same_plan_and_curve(self):
+        a, b = _tiny_search(seed=0), _tiny_search(seed=0)
+        assert a.specs() == b.specs()
+        assert a.provenance["best_curve"] == b.provenance["best_curve"]
+        assert a.predicted == b.predicted
+
+    def test_best_curve_monotone_nondecreasing(self):
+        curve = _tiny_search(seed=1).provenance["best_curve"]
+        assert len(curve) == EVO.iterations
+        assert all(b >= a for a, b in zip(curve, curve[1:]))
+
+
+class TestLegalization:
+    def test_misaligned_cols_snap_to_exact_family(self):
+        l = LayerShape("conv", 3, 3, 16, 64, 16)        # M=144, N=64
+        bad = EpitomeSpec(M=144, N=64, m=96, n=24, bm=8, bn=8)
+        assert not is_kernel_exact(bad)                 # offsets not aligned
+        legal, err = legalize_spec(l, bad, (8, 8))
+        assert legal is not None and is_kernel_exact(legal)
+        assert legal.n in (8, 64)                       # wrap or identity
+        # area preserved within the reported snap error
+        assert abs(legal.m * legal.n - 96 * 24) / (96 * 24) == pytest.approx(err)
+
+    def test_dense_stays_dense(self):
+        l = tiny_resnet_layers()[0]
+        assert legalize_spec(l, None, (8, 8)) == (None, 0.0)
+
+    def test_legalized_plan_is_exact_and_resimulated(self):
+        plan = _tiny_search(seed=2)
+        legal = legalize_plan(plan)
+        assert legal.is_legalized()
+        assert all(lp.spec is None or is_kernel_exact(lp.spec)
+                   for lp in legal.layers)
+        assert legal.predicted is not None
+        assert legal.snap_err_max >= legal.snap_err_mean >= 0.0
+
+    def test_auto_plan_born_legal(self):
+        plan = auto_plan("tiny-resnet", weight_bits=3)
+        assert plan.is_legalized() and plan.snap_err_max == 0.0
+        assert all(lp.spec is None or is_kernel_exact(lp.spec)
+                   for lp in plan.layers)
+
+    def test_plan_conv_specs_unmoved_contract(self):
+        """The designer moved to pim/plan keeps its contract (and stays
+        re-exported from models.resnet for existing callers)."""
+        from repro.models.resnet import plan_conv_specs as reexported
+        assert reexported is plan_conv_specs
+        specs = plan_conv_specs(tiny_resnet_layers(), target_cr=2.0,
+                                patch=(8, 8))
+        assert all(s is not None for s in specs)
+        for s in specs:
+            assert (s.col_offsets() % s.bn == 0).all()
+
+
+class TestPlanRoundTrip:
+    def test_json_round_trip_bit_identical(self):
+        plan = legalize_plan(_tiny_search(seed=3))
+        rt = EpitomePlan.from_json(plan.to_json())
+        assert rt.to_dict() == plan.to_dict()
+        assert rt.specs() == plan.specs()               # EpitomeSpec eq
+        assert rt.bits() == plan.bits()
+
+    def test_from_plan_bit_identical_model_config(self):
+        from repro.models.resnet import ResNetModel
+        plan = legalize_plan(_tiny_search(seed=3))
+        m1 = ResNetModel.from_plan(plan)
+        m2 = ResNetModel.from_plan(EpitomePlan.from_json(plan.to_json()))
+        assert m1.specs == m2.specs == plan.specs()
+        assert m1.layer_bits == m2.layer_bits
+        assert m1.mode == m2.mode == plan.uniform_mode()
+
+    def test_save_load(self, tmp_path):
+        plan = uniform_plan("resnet50", weight_bits=3, act_bits=9)
+        path = tmp_path / "plan.json"
+        plan.save(str(path))
+        loaded = EpitomePlan.load(str(path))
+        assert loaded.to_dict() == plan.to_dict()
+
+    def test_schema_rejects_drift(self):
+        d = legalize_plan(_tiny_search(seed=4)).to_dict()
+        validate_plan_dict(d)                           # sanity: valid
+        for mutate in (
+            lambda d: d.update(version=99),
+            lambda d: d.update(arch="resnet9000"),
+            lambda d: d.update(extra_key=1),
+            lambda d: d.pop("provenance"),
+            lambda d: d["layers"][0].update(mode="warp-drive"),
+            lambda d: d["layers"][0].update(weight_bits=99),
+            lambda d: d["layers"][0].pop("snap_err"),
+            lambda d: d["layers"][2]["spec"].update(m=10**9),
+            lambda d: d["layers"][2]["spec"].pop("bn"),
+        ):
+            bad = json.loads(json.dumps(d))
+            mutate(bad)
+            with pytest.raises(PlanSchemaError):
+                validate_plan_dict(bad)
+
+    def test_layer_name_drift_fails_loudly(self):
+        d = legalize_plan(_tiny_search(seed=4)).to_dict()
+        d["layers"][0]["name"] = "conv0"
+        with pytest.raises(PlanSchemaError, match="drifted"):
+            EpitomePlan.from_dict(d)
+
+    def test_mixed_mode_plan_refuses_model_build(self):
+        plan = legalize_plan(_tiny_search(seed=4))
+        plan.layers[0] = dataclasses.replace(plan.layers[0], mode="folded")
+        with pytest.raises(ValueError, match="mixes execution modes"):
+            plan.uniform_mode()
+
+
+class TestLegalizedExecutionParity:
+    def test_legalized_evo_plan_kernel_q3_matches_reconstruct(self):
+        """The acceptance contract: a legalized evo plan runs kernel x q3
+        through the fused int8 kernel and matches the reconstruct
+        reference within the repo-wide 1e-4 tolerance."""
+        import jax
+        import jax.numpy as jnp
+        from repro.models.resnet import ResNetModel
+        legal = legalize_plan(_tiny_search(seed=0))
+        assert legal.uniform_mode() == "kernel"
+        assert legal.n_epitomized > 0
+        model = ResNetModel.from_plan(legal)
+        assert model.specs == legal.specs()             # byte-identical
+        params = model.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+        y = model.apply(model.prepack(params), x)
+        ref = ResNetModel(model.layers, model.specs,
+                          quant_bits=model.layer_bits,
+                          mode="reconstruct").apply(params, x)
+        assert y.shape == ref.shape
+        assert float(jnp.abs(y - ref).max()) <= 1e-4
+
+    def test_registry_evo_variant_and_plan_kwarg(self, tmp_path):
+        from repro.configs import get_resnet
+        m = get_resnet("tiny-resnet", "evo-latency-q3")
+        assert m.mode == "kernel" and set(m.layer_bits) == {3}
+        assert any(s is not None for s in m.specs)
+        # plan= kwarg round-trips through a saved file
+        plan = legalize_plan(_tiny_search(seed=0))
+        path = tmp_path / "p.json"
+        plan.save(str(path))
+        m2 = get_resnet("tiny-resnet", plan=str(path))
+        assert m2.specs == plan.specs()
+        with pytest.raises(ValueError, match="plan is for"):
+            get_resnet("resnet50", plan=str(path))
