@@ -153,6 +153,49 @@ def legalized_plan(emit) -> None:
          f"epitomized={legal.n_epitomized}/{len(legal.layers)}")
 
 
+def lm_plan(emit) -> None:
+    """The LM half of the plan pipeline in CI: auto-plan the smoke LM,
+    build the plan-driven config, and serve the scan-over-groups decode
+    with the vmapped tree prepack.  The derived column carries warm tok/s
+    prepacked vs on-the-fly — the user-visible win of packing the int8
+    codes once instead of re-quantizing every epitome inside every jitted
+    forward — plus a prepacked-vs-not bit-identity check of the sampled
+    tokens."""
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import _warm_tok_s, generate
+    from repro.models import lm
+    from repro.pim.plan import auto_plan
+
+    arch = "rwkv6-7b"
+    plan = auto_plan(f"{arch}-smoke", target_cr=2.0, weight_bits=3,
+                     mode="kernel")
+    cfg = get_smoke_config(arch, plan=plan)
+    key = jax.random.PRNGKey(0)
+    init_key, prompt_key, sample_key = jax.random.split(key, 3)
+    params = lm.init_params(init_key, cfg)
+    assert lm.needs_prepack(cfg)
+    packed = lm.prepack_params(params, cfg)
+    B, P, gen = 2, 8, 8
+    prompts = jax.random.randint(prompt_key, (B, P), 0, cfg.vocab)
+    toks, _ = generate(params, cfg, prompts, P + gen + 1, gen)
+    toks_p, _ = generate(packed, cfg, prompts, P + gen + 1, gen)
+    identical = bool(np.array_equal(np.asarray(toks), np.asarray(toks_p)))
+    assert identical, "prepacked decode drifted from the on-the-fly path"
+    t0 = time.perf_counter()
+    tok_s_packed = _warm_tok_s(packed, cfg, prompts, P + gen + 1, gen, 0.0,
+                               sample_key)
+    tok_s_otf = _warm_tok_s(params, cfg, prompts, P + gen + 1, gen, 0.0,
+                            sample_key)
+    emit(f"kernels/plan-lm-{arch}-smoke-q3",
+         (time.perf_counter() - t0) * 1e6,
+         f"tok_s_prepacked={tok_s_packed:.1f};tok_s_onthefly={tok_s_otf:.1f};"
+         f"speedup=x{tok_s_packed / tok_s_otf:.2f};bit_identical={identical};"
+         f"epitomized={plan.n_epitomized}/{len(plan.layers)};"
+         f"xbars={plan.predicted['xbars']}")
+
+
 def quant_epitome(emit) -> None:
     """The flagship fused path (int8-packed quantized epitome) against the
     execution ladder it replaces: reconstruct / wrapped / fp kernel.

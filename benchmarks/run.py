@@ -72,7 +72,8 @@ def main() -> None:
                               kernels_bench.pallas_interpret_correctness(e),
                               kernels_bench.quant_epitome(e),
                               kernels_bench.conv_quant_epitome(e),
-                              kernels_bench.legalized_plan(e)),
+                              kernels_bench.legalized_plan(e),
+                              kernels_bench.lm_plan(e)),
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

@@ -118,21 +118,58 @@ def get_resnet(arch: str = "tiny-resnet", epitome: str = "off", plan=None):
     return build(specs, quant_bits=ep.quant_bits, mode=ep.mode)
 
 
-def get_config(arch: str, epitome: str = "off", **overrides) -> ModelConfig:
+def _plan_layer_config(plan, expected_arch: str):
+    """Load/validate an LM EpitomePlan for ``ModelConfig.layer_config``.
+
+    Accepts an EpitomePlan or a saved plan JSON path.  Kernel-mode specs
+    must be kernel-exact (bn-aligned) — a searched-but-unlegalized plan
+    would silently sample snapped, inexact geometry in the fused kernels —
+    so reject those with a pointer at the legalizer."""
+    from ..pim.plan import EpitomePlan, is_kernel_exact
+    if isinstance(plan, str):
+        plan = EpitomePlan.load(plan)
+    if plan.arch != expected_arch:
+        raise ValueError(f"plan is for {plan.arch!r}, requested "
+                         f"{expected_arch!r}")
+    for lp in plan.layers:
+        if lp.spec is not None and lp.mode == "kernel" \
+                and not is_kernel_exact(lp.spec):
+            raise ValueError(
+                f"plan layer {lp.name!r} spec is not kernel-exact; run "
+                f"`python -m repro.launch.plan legalize` before building "
+                f"a model from it")
+    return plan.layer_configs()
+
+
+def get_config(arch: str, epitome: str = "off", plan=None,
+               **overrides) -> ModelConfig:
+    """Full-scale config.  ``plan`` (an EpitomePlan or plan JSON path for
+    this arch) installs per-layer {spec, bits, mode} via
+    ModelConfig.layer_config; the global epitome settings then only govern
+    layers the plan does not name."""
     cfg = BUILDERS[arch](epitome_settings(epitome))
+    if plan is not None:
+        cfg = dataclasses.replace(
+            cfg, layer_config=_plan_layer_config(plan, arch))
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     return cfg
 
 
-def get_smoke_config(arch: str, epitome: str = "off") -> ModelConfig:
-    """Reduced same-family config: one super-block repeat, narrow dims."""
+def get_smoke_config(arch: str, epitome: str = "off",
+                     plan=None) -> ModelConfig:
+    """Reduced same-family config: one super-block repeat, narrow dims.
+    ``plan`` must target the matching '<arch>-smoke' plan arch."""
     full = get_config(arch, epitome)
     ep = epitome_settings(epitome)
     if ep.enabled:   # small dims still exercised via a small min_params
         ep = dataclasses.replace(ep, min_params=0, target_cr=2.0, patch=(32, 32))
+    layer_config = ()
+    if plan is not None:
+        layer_config = _plan_layer_config(plan, f"{arch}-smoke")
     return dataclasses.replace(
         full,
+        layer_config=layer_config,
         n_layers=2 * len(full.pattern),
         d_model=64,
         n_heads=4,

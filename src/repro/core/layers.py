@@ -31,16 +31,18 @@ configuration (e.g. 3-bit EPIM-ResNet50): the epitome is packed to int8
 codes with per-crossbar-tile (scale, zero) and the fused
 kernels/quant_epitome_matmul dequantizes in registers — the kernel reads
 only int8, once, for all virtual tiles.  By default the pack step runs
-inside the jitted forward (one O(m*n) quantize per call, fused by XLA);
-weight-stationary serving should `prepack_linear` the params once so
-forwards skip re-quantizing entirely.  The fused path is inference-only
-(codes are rounded, no STE); training under quantization uses the
-fake-quant modes.
+per forward (its own cached jit program); weight-stationary serving
+should `prepack_linear` the params once — or `prepack_tree` for a whole
+scan-over-groups LM param stack (vmapped over the leading group axis) —
+so forwards skip re-quantizing entirely.  The fused path is
+inference-only (codes are rounded, no STE); training under quantization
+uses the fake-quant modes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -86,32 +88,62 @@ def init_linear(key: Array, M: int, N: int, cfg: EpLayerConfig,
     return p
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _quant_kernel_call(cfg: EpLayerConfig, x: Array, packed_arrays) -> Array:
+    """The fused quantized-epitome kernel, opaque to autodiff.
+
+    Module-level (not a per-call closure) so its identity — and therefore
+    every jit cache keyed on it — is stable across applies.  The custom_vjp
+    makes AD call our bwd instead of differentiating through the Pallas
+    call; bwd raises a targeted error because the packed int8 codes go
+    through a hard round with no straight-through estimator —
+    differentiating would silently train nothing.  ``packed_arrays`` is the
+    (q, scales, zeros) triple; the static block sizes are rebuilt from
+    (spec, quant)."""
+    from repro.kernels.ops import (PackedEpitome, pack_blocks,
+                                   quant_epitome_matmul)
+    bk, bn = pack_blocks(cfg.spec, cfg.quant)
+    packed = PackedEpitome(*packed_arrays, bk, bn)
+    return quant_epitome_matmul(x, None, cfg.spec, cfg.quant, packed=packed)
+
+
+def _quant_kernel_fwd(cfg, x, packed_arrays):
+    return _quant_kernel_call(cfg, x, packed_arrays), None
+
+
+def _quant_kernel_bwd(cfg, res, g):
+    raise NotImplementedError(
+        "mode='kernel' with quant is inference-only: the packed int8 "
+        "codes have no straight-through estimator. Train under "
+        "quantization with a fake-quant mode (e.g. 'folded'/folded-q3) "
+        "and switch to the fused kernel for serving.")
+
+
+_quant_kernel_call.defvjp(_quant_kernel_fwd, _quant_kernel_bwd)
+
+# Jitted entry points (cfg static): eager repeated applies of the same
+# layer hit the compile cache instead of rebuilding and re-tracing a fresh
+# custom_vjp wrapper per call; under an outer jit they simply inline.  The
+# pack is its OWN program — shared by prepack_linear and the on-the-fly
+# path — so a prepacked layer carries bit-identical codes AND scales to
+# what a non-prepacked forward would compute (one compiled pack, two call
+# sites; were the pack fused into the matmul program instead, FMA
+# contraction could shift the fp scales by an ulp between the paths).
+_quant_kernel_apply = jax.jit(_quant_kernel_call, static_argnums=(0,))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _pack_arrays(E: Array, *, cfg: EpLayerConfig):
+    from repro.kernels.ops import pack_epitome
+    p = pack_epitome(E, cfg.spec, cfg.quant)
+    return p.q, p.scales, p.zeros
+
+
 def _quant_kernel_inference_only(x: Array, E: Array, cfg: EpLayerConfig,
                                  packed) -> Array:
-    """Run the fused quantized-epitome kernel, opaque to autodiff.
-
-    The custom_vjp makes AD call our bwd instead of differentiating through
-    the Pallas call; bwd raises a targeted error because the packed int8
-    codes go through a hard round with no straight-through estimator —
-    differentiating would silently train nothing."""
-    from repro.kernels.ops import quant_epitome_matmul
-
-    @jax.custom_vjp
-    def call(x, E):
-        return quant_epitome_matmul(x, E, cfg.spec, cfg.quant, packed=packed)
-
-    def fwd(x, E):
-        return call(x, E), None
-
-    def bwd(_, g):
-        raise NotImplementedError(
-            "mode='kernel' with quant is inference-only: the packed int8 "
-            "codes have no straight-through estimator. Train under "
-            "quantization with a fake-quant mode (e.g. 'folded'/folded-q3) "
-            "and switch to the fused kernel for serving.")
-
-    call.defvjp(fwd, bwd)
-    return call(x, E)
+    arrays = ((packed.q, packed.scales, packed.zeros)
+              if packed is not None else _pack_arrays(E, cfg=cfg))
+    return _quant_kernel_apply(cfg, x, arrays)
 
 
 def prepack_linear(params: dict, cfg: EpLayerConfig) -> dict:
@@ -126,11 +158,38 @@ def prepack_linear(params: dict, cfg: EpLayerConfig) -> dict:
     param groups."""
     if not (cfg.is_epitome and cfg.quant is not None and cfg.mode == "kernel"):
         return params
-    from repro.kernels.ops import pack_epitome
-    p = pack_epitome(params["E"], cfg.spec, cfg.quant)
     out = dict(params)
-    out["Eq"], out["Es"], out["Ez"] = p.q, p.scales, p.zeros
+    # same jitted pack program the on-the-fly path runs -> bit-identical
+    out["Eq"], out["Es"], out["Ez"] = _pack_arrays(params["E"], cfg=cfg)
     return out
+
+
+def prepack_tree(params, layer_configs: Mapping[str, EpLayerConfig],
+                 *, stacked: bool = True):
+    """Tree variant of ``prepack_linear`` for scan-over-groups params.
+
+    Walks a param pytree (e.g. the LM's ``params["groups"]``) and, for
+    every linear-layer subdict whose '/'-joined path names a kernel x quant
+    epitome entry of ``layer_configs``, packs the int8 codes once.  The
+    scanned LM stacks every leaf with a leading group axis, so the pack
+    runs under ``jax.vmap`` over that axis (``stacked=True``); the new
+    Eq/Es/Ez leaves then carry the same leading axis and slice per group
+    inside ``lax.scan`` exactly like E does.  Everything else — dense
+    layers, norms, paths the mapping does not name — passes through
+    untouched."""
+    def walk(tree, path):
+        if not isinstance(tree, dict):
+            return tree
+        if "E" in tree:                      # an epitome linear layer
+            cfg = layer_configs.get(path)
+            if cfg is None or not (cfg.is_epitome and cfg.quant is not None
+                                   and cfg.mode == "kernel"):
+                return tree
+            pack = lambda p: prepack_linear(p, cfg)
+            return jax.vmap(pack)(tree) if stacked else pack(tree)
+        return {k: walk(v, f"{path}/{k}" if path else k)
+                for k, v in tree.items()}
+    return walk(params, "")
 
 
 def _packed_of(params: dict, cfg: EpLayerConfig):

@@ -86,15 +86,56 @@ def cmd_show(args) -> None:
               f"{lp.snap_err:>6.3f}  {_fmt_spec(lp.spec)}")
 
 
+def _run_lm(plan, args) -> None:
+    """Execute a legalized LM plan: plan-driven smoke config, vmapped tree
+    prepack, scan-over-groups decode through the fused int8 kernel."""
+    import jax
+    from ..configs import get_smoke_config
+    from ..models import lm
+    from ..pim.plan import LM_SMOKE_SUFFIX
+    from .serve import _warm_tok_s
+
+    if not plan.arch.endswith(LM_SMOKE_SUFFIX):
+        raise SystemExit(
+            f"plan {plan.arch!r} targets the full-scale LM — too large to "
+            f"instantiate here; run the matching '{plan.arch}{LM_SMOKE_SUFFIX}'"
+            " plan, or serve the full model via repro.launch.serve --plan")
+    arch = plan.arch[:-len(LM_SMOKE_SUFFIX)]
+    cfg = get_smoke_config(arch, plan=plan)
+    key = jax.random.PRNGKey(args.seed)
+    init_key, prompt_key, sample_key = jax.random.split(key, 3)
+    params = lm.init_params(init_key, cfg)
+    packed = lm.prepack_params(params, cfg) if lm.needs_prepack(cfg) else None
+    B, P, gen = args.batch, 8, 8
+    prompts = jax.random.randint(prompt_key, (B, P), 0, cfg.vocab)
+    max_len = P + gen + 1
+    print(f"[plan] {plan.arch}: {plan.n_epitomized}/{len(plan.layers)} "
+          f"projections epitomized, prepacked={packed is not None}")
+    tw = lambda p: _warm_tok_s(p, cfg, prompts, max_len, gen, 0.0, sample_key)
+    warm = tw(packed if packed is not None else params)
+    pred = plan.predicted or {}
+    print(f"[plan] predicted (PIM simulator): "
+          f"{pred.get('latency_s', float('nan'))*1e3:.3f}ms "
+          f"/ {pred.get('energy_j', float('nan'))*1e3:.3f}mJ "
+          f"/ {pred.get('xbars', '-')} XBs")
+    print(f"[plan] measured  (this host, batch={B} gen={gen}): "
+          f"{warm:.1f} warm tok/s "
+          f"(interpret-mode Pallas on CPU measures Python, not hardware)")
+
+
 def cmd_run(args) -> None:
     import jax
     import jax.numpy as jnp
-    from ..models.resnet import ResNetModel
 
     plan = _load(args.plan)
     if not plan.is_legalized():
         raise SystemExit(f"plan {args.plan} is not legalized; searched specs "
                          "are not kernel-exact — run `legalize` first")
+    from ..pim.plan import is_lm_arch
+    if is_lm_arch(plan.arch):
+        _run_lm(plan, args)
+        return
+    from ..models.resnet import ResNetModel
     model = ResNetModel.from_plan(plan)
     # the contract of the pipeline: what runs IS what was planned
     assert model.specs == plan.specs(), \

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from ..core.layers import apply_linear, init_linear
 from .common import apply_rope, shard, softcap, BATCH_AXES, TENSOR_AXIS
-from .config import ModelConfig
+from .config import ModelConfig, layer_name as _nm
 
 Array = jax.Array
 
@@ -33,16 +33,16 @@ UNROLL_KV = False
 # ---------------------------------------------------------------------------
 # Parameters
 # ---------------------------------------------------------------------------
-def init_attn(key: Array, cfg: ModelConfig) -> dict:
+def init_attn(key: Array, cfg: ModelConfig, prefix: str = "") -> dict:
     d, hd = cfg.d_model, cfg.hd
     nq, nkv = cfg.n_heads, cfg.n_kv_heads
     kq, kk, kv, ko = jax.random.split(key, 4)
     dt = cfg.pdtype
     return {
-        "wq": init_linear(kq, d, nq * hd, cfg.ep(d, nq * hd), bias=cfg.qkv_bias, dtype=dt),
-        "wk": init_linear(kk, d, nkv * hd, cfg.ep(d, nkv * hd), bias=cfg.qkv_bias, dtype=dt),
-        "wv": init_linear(kv, d, nkv * hd, cfg.ep(d, nkv * hd), bias=cfg.qkv_bias, dtype=dt),
-        "wo": init_linear(ko, nq * hd, d, cfg.ep(nq * hd, d), dtype=dt),
+        "wq": init_linear(kq, d, nq * hd, cfg.ep(d, nq * hd, _nm(prefix, "wq")), bias=cfg.qkv_bias, dtype=dt),
+        "wk": init_linear(kk, d, nkv * hd, cfg.ep(d, nkv * hd, _nm(prefix, "wk")), bias=cfg.qkv_bias, dtype=dt),
+        "wv": init_linear(kv, d, nkv * hd, cfg.ep(d, nkv * hd, _nm(prefix, "wv")), bias=cfg.qkv_bias, dtype=dt),
+        "wo": init_linear(ko, nq * hd, d, cfg.ep(nq * hd, d, _nm(prefix, "wo")), dtype=dt),
     }
 
 
@@ -117,16 +117,17 @@ def _chunk_attn(q, k, v, q_offset, kv_chunk, causal, window, cap):
 
 def attention(params: dict, x: Array, cfg: ModelConfig, *,
               local: bool = False, positions: Optional[Array] = None,
-              kv_chunk: int = 0, return_kv: bool = False):
+              kv_chunk: int = 0, return_kv: bool = False,
+              prefix: str = ""):
     """Full-sequence causal attention (training / prefill)."""
     kv_chunk = kv_chunk or cfg.attn_kv_chunk
     B, S, d = x.shape
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     if positions is None:
         positions = jnp.arange(S)
-    q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd)).reshape(B, S, nq, hd)
-    k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd)).reshape(B, S, nkv, hd)
-    v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd)).reshape(B, S, nkv, hd)
+    q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd, _nm(prefix, "wq"))).reshape(B, S, nq, hd)
+    k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wk"))).reshape(B, S, nkv, hd)
+    v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wv"))).reshape(B, S, nkv, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     # heads tensor-parallel
@@ -136,7 +137,7 @@ def attention(params: dict, x: Array, cfg: ModelConfig, *,
     window = cfg.window if local else None
     o = _chunk_attn(q, k, v, 0, min(kv_chunk, S), True, window, cfg.attn_softcap)
     o = o.reshape(B, S, nq * hd)
-    out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d))
+    out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d, _nm(prefix, "wo")))
     if return_kv:
         return out, (k, v)
     return out
@@ -185,8 +186,8 @@ def kv_cache_spec(batch_axes, seq_axes):
 
 
 def decode_attention(params: dict, x: Array, cache: dict,
-                     pos: Array, cfg: ModelConfig, *, local: bool = False
-                     ) -> Tuple[Array, dict]:
+                     pos: Array, cfg: ModelConfig, *, local: bool = False,
+                     prefix: str = "") -> Tuple[Array, dict]:
     """One decode step.  x: (B, 1, d); cache: {k, v[, k_s, v_s]} with
     k/v (B, Smax, Hkv, hd); pos: scalar int32 write index.
     Returns (out, new cache)."""
@@ -194,9 +195,9 @@ def decode_attention(params: dict, x: Array, cache: dict,
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     G = nq // nkv
     Smax = cache["k"].shape[1]
-    q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd)).reshape(B, 1, nq, hd)
-    k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd)).reshape(B, 1, nkv, hd)
-    v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd)).reshape(B, 1, nkv, hd)
+    q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd, _nm(prefix, "wq"))).reshape(B, 1, nq, hd)
+    k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wk"))).reshape(B, 1, nkv, hd)
+    v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wv"))).reshape(B, 1, nkv, hd)
     posv = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos[None]
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
@@ -227,5 +228,5 @@ def decode_attention(params: dict, x: Array, cache: dict,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, vc)
     o = o.reshape(B, 1, nq * hd).astype(x.dtype)
-    out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d))
+    out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d, _nm(prefix, "wo")))
     return out, cache

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from ..core.layers import apply_linear, init_linear
 from .attention import attention, decode_attention, init_attn
 from .common import act_fn, init_rms_norm, rms_norm, shard, BATCH_AXES, TENSOR_AXIS
-from .config import LayerKind, ModelConfig
+from .config import LayerKind, ModelConfig, layer_name as _nm
 from .moe import init_moe, moe_ffn
 from .ssm import (
     init_mamba, init_rwkv, init_rwkv_ffn,
@@ -25,25 +25,25 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 # FFN (SwiGLU / gelu-MLP)
 # ---------------------------------------------------------------------------
-def init_ffn(key: Array, cfg: ModelConfig) -> dict:
+def init_ffn(key: Array, cfg: ModelConfig, prefix: str = "") -> dict:
     d, ff = cfg.d_model, cfg.d_ff
     k1, k2, k3 = jax.random.split(key, 3)
     dt = cfg.pdtype
     return {
-        "w_gate": init_linear(k1, d, ff, cfg.ep(d, ff), dtype=dt),
-        "w_up": init_linear(k2, d, ff, cfg.ep(d, ff), dtype=dt),
-        "w_down": init_linear(k3, ff, d, cfg.ep(ff, d), dtype=dt),
+        "w_gate": init_linear(k1, d, ff, cfg.ep(d, ff, _nm(prefix, "w_gate")), dtype=dt),
+        "w_up": init_linear(k2, d, ff, cfg.ep(d, ff, _nm(prefix, "w_up")), dtype=dt),
+        "w_down": init_linear(k3, ff, d, cfg.ep(ff, d, _nm(prefix, "w_down")), dtype=dt),
     }
 
 
-def ffn(params: dict, x: Array, cfg: ModelConfig) -> Array:
+def ffn(params: dict, x: Array, cfg: ModelConfig, prefix: str = "") -> Array:
     d, ff = cfg.d_model, cfg.d_ff
     act = act_fn(cfg.act)
-    g = apply_linear(params["w_gate"], x, cfg.ep(d, ff))
-    u = apply_linear(params["w_up"], x, cfg.ep(d, ff))
+    g = apply_linear(params["w_gate"], x, cfg.ep(d, ff, _nm(prefix, "w_gate")))
+    u = apply_linear(params["w_up"], x, cfg.ep(d, ff, _nm(prefix, "w_up")))
     h = act(g) * u
     h = shard(h, BATCH_AXES, None, TENSOR_AXIS)
-    return apply_linear(params["w_down"], h, cfg.ep(ff, d))
+    return apply_linear(params["w_down"], h, cfg.ep(ff, d, _nm(prefix, "w_down")))
 
 
 # ---------------------------------------------------------------------------
@@ -55,22 +55,23 @@ def init_group(key: Array, cfg: ModelConfig) -> Dict[str, Any]:
     for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
         k_mix, k_ffn = jax.random.split(keys[i])
         layer: Dict[str, Any] = {"norm1": init_rms_norm(cfg.d_model, cfg.pdtype)}
+        mixer_p, ffn_p = f"L{i}/mixer", f"L{i}/ffn"
         if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
-            layer["mixer"] = init_attn(k_mix, cfg)
+            layer["mixer"] = init_attn(k_mix, cfg, prefix=mixer_p)
         elif kind == LayerKind.MAMBA.value:
-            layer["mixer"] = init_mamba(k_mix, cfg)
+            layer["mixer"] = init_mamba(k_mix, cfg, prefix=mixer_p)
         elif kind == LayerKind.RWKV.value:
-            layer["mixer"] = init_rwkv(k_mix, cfg)
+            layer["mixer"] = init_rwkv(k_mix, cfg, prefix=mixer_p)
         else:
             raise ValueError(kind)
         if ffn_kind != "none":
             layer["norm2"] = init_rms_norm(cfg.d_model, cfg.pdtype)
         if ffn_kind == "dense":
-            layer["ffn"] = init_ffn(k_ffn, cfg)
+            layer["ffn"] = init_ffn(k_ffn, cfg, prefix=ffn_p)
         elif ffn_kind == "moe":
             layer["ffn"] = init_moe(k_ffn, cfg)
         elif ffn_kind == "rwkv_ffn":
-            layer["ffn"] = init_rwkv_ffn(k_ffn, cfg)
+            layer["ffn"] = init_rwkv_ffn(k_ffn, cfg, prefix=ffn_p)
         params[f"L{i}"] = layer
     return params
 
@@ -80,15 +81,18 @@ def apply_group(params: Dict[str, Any], x: Array, cfg: ModelConfig,
     """Training / prefill forward through one super-block."""
     for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
         layer = params[f"L{i}"]
+        mixer_p, ffn_p = f"L{i}/mixer", f"L{i}/ffn"
         h = rms_norm(x, layer["norm1"], cfg.norm_eps)
         if kind == LayerKind.ATTN.value:
-            mix = attention(layer["mixer"], h, cfg, local=False, positions=positions)
+            mix = attention(layer["mixer"], h, cfg, local=False,
+                            positions=positions, prefix=mixer_p)
         elif kind == LayerKind.ATTN_LOCAL.value:
-            mix = attention(layer["mixer"], h, cfg, local=True, positions=positions)
+            mix = attention(layer["mixer"], h, cfg, local=True,
+                            positions=positions, prefix=mixer_p)
         elif kind == LayerKind.MAMBA.value:
-            mix, _ = mamba_mix(layer["mixer"], h, cfg)
+            mix, _ = mamba_mix(layer["mixer"], h, cfg, prefix=mixer_p)
         elif kind == LayerKind.RWKV.value:
-            mix, _ = rwkv_time_mix(layer["mixer"], h, cfg)
+            mix, _ = rwkv_time_mix(layer["mixer"], h, cfg, prefix=mixer_p)
         x = x + mix
         x = (shard(x, BATCH_AXES, TENSOR_AXIS, None)   # seq-parallel residual
              if cfg.seq_shard_residual else shard(x, BATCH_AXES, None, None))
@@ -96,11 +100,11 @@ def apply_group(params: Dict[str, Any], x: Array, cfg: ModelConfig,
             continue
         h = rms_norm(x, layer["norm2"], cfg.norm_eps)
         if ffn_kind == "dense":
-            f = ffn(layer["ffn"], h, cfg)
+            f = ffn(layer["ffn"], h, cfg, prefix=ffn_p)
         elif ffn_kind == "moe":
             f = moe_ffn(layer["ffn"], h, cfg)
         elif ffn_kind == "rwkv_ffn":
-            f, _ = rwkv_channel_mix(layer["ffn"], h, cfg)
+            f, _ = rwkv_channel_mix(layer["ffn"], h, cfg, prefix=ffn_p)
         x = x + f
         x = (shard(x, BATCH_AXES, TENSOR_AXIS, None)
              if cfg.seq_shard_residual else shard(x, BATCH_AXES, None, None))
@@ -116,11 +120,13 @@ def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
         layer = params[f"L{i}"]
         st = state[f"L{i}"]
         ns = dict(st)
+        mixer_p, ffn_p = f"L{i}/mixer", f"L{i}/ffn"
         h = rms_norm(x, layer["norm1"], cfg.norm_eps)
         if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
             mix, (k, v) = attention(layer["mixer"], h, cfg,
                                     local=(kind == LayerKind.ATTN_LOCAL.value),
-                                    positions=positions, return_kv=True)
+                                    positions=positions, return_kv=True,
+                                    prefix=mixer_p)
             if cfg.kv_cache_bits == 8:
                 from .attention import quantize_kv
                 kq, ks = quantize_kv(k)
@@ -136,23 +142,26 @@ def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
                     st["v"], v.astype(st["v"].dtype), 0, 1)
         elif kind == LayerKind.MAMBA.value:
             mix, (conv, hst) = mamba_mix(layer["mixer"], h, cfg,
-                                         state=(st["conv"].astype(h.dtype), st["h"]))
+                                         state=(st["conv"].astype(h.dtype), st["h"]),
+                                         prefix=mixer_p)
             ns["conv"], ns["h"] = conv.astype(st["conv"].dtype), hst
         elif kind == LayerKind.RWKV.value:
             mix, (xp, s) = rwkv_time_mix(layer["mixer"], h, cfg,
-                                         state=(st["x_prev"].astype(h.dtype), st["s"]))
+                                         state=(st["x_prev"].astype(h.dtype), st["s"]),
+                                         prefix=mixer_p)
             ns["x_prev"], ns["s"] = xp.astype(st["x_prev"].dtype), s
         x = x + mix
         if ffn_kind != "none":
             h = rms_norm(x, layer["norm2"], cfg.norm_eps)
             if ffn_kind == "dense":
-                f = ffn(layer["ffn"], h, cfg)
+                f = ffn(layer["ffn"], h, cfg, prefix=ffn_p)
             elif ffn_kind == "moe":
                 f = moe_ffn(layer["ffn"], h, cfg)
             elif ffn_kind == "rwkv_ffn":
                 f, xp2 = rwkv_channel_mix(layer["ffn"], h, cfg,
                                           x_prev=st.get("ffn_x_prev", jnp.zeros(
-                                              (x.shape[0], cfg.d_model), x.dtype)).astype(h.dtype))
+                                              (x.shape[0], cfg.d_model), x.dtype)).astype(h.dtype),
+                                          prefix=ffn_p)
                 ns["ffn_x_prev"] = xp2.astype(cfg.cdtype)
             x = x + f
         state = {**state, f"L{i}": ns}
@@ -191,30 +200,34 @@ def decode_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
         layer = params[f"L{i}"]
         st = state[f"L{i}"]
         ns = dict(st)
+        mixer_p, ffn_p = f"L{i}/mixer", f"L{i}/ffn"
         h = rms_norm(x, layer["norm1"], cfg.norm_eps)
         if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
             mix, new_cache = decode_attention(
                 layer["mixer"], h, st, pos, cfg,
-                local=(kind == LayerKind.ATTN_LOCAL.value))
+                local=(kind == LayerKind.ATTN_LOCAL.value), prefix=mixer_p)
             ns.update(new_cache)
         elif kind == LayerKind.MAMBA.value:
             mix, (conv, hst) = mamba_mix(layer["mixer"], h, cfg,
-                                         state=(st["conv"], st["h"]))
+                                         state=(st["conv"], st["h"]),
+                                         prefix=mixer_p)
             ns["conv"], ns["h"] = conv, hst
         elif kind == LayerKind.RWKV.value:
             mix, (xp, s) = rwkv_time_mix(layer["mixer"], h, cfg,
-                                         state=(st["x_prev"].astype(h.dtype), st["s"]))
+                                         state=(st["x_prev"].astype(h.dtype), st["s"]),
+                                         prefix=mixer_p)
             ns["x_prev"], ns["s"] = xp.astype(cfg.cdtype), s
         x = x + mix
         if ffn_kind != "none":
             h = rms_norm(x, layer["norm2"], cfg.norm_eps)
             if ffn_kind == "dense":
-                f = ffn(layer["ffn"], h, cfg)
+                f = ffn(layer["ffn"], h, cfg, prefix=ffn_p)
             elif ffn_kind == "moe":
                 f = moe_ffn(layer["ffn"], h, cfg)
             elif ffn_kind == "rwkv_ffn":
                 f, xp2 = rwkv_channel_mix(layer["ffn"], h, cfg,
-                                          x_prev=st["ffn_x_prev"].astype(h.dtype))
+                                          x_prev=st["ffn_x_prev"].astype(h.dtype),
+                                          prefix=ffn_p)
                 ns["ffn_x_prev"] = xp2.astype(cfg.cdtype)
             x = x + f
         new_state[f"L{i}"] = ns

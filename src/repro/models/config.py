@@ -10,7 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import math
+import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -43,6 +45,20 @@ class EpitomeSettings:
         if not self.enabled or M * N < self.min_params:
             return EpLayerConfig(spec=None, quant=self._qcfg())
         spec = plan_epitome(M, N, self.target_cr, patch=self.patch)
+        if spec is not None and self.mode == "kernel":
+            # the fused kernels' OFAT col-block table is exact only for the
+            # bn-aligned families; a planned spec with spread (unaligned)
+            # column offsets would silently fall back to the kernel's
+            # snapped — inexact — sampling.  Route through the legalizer so
+            # what runs is bn-aligned/kernel-exact, and surface the snap.
+            legal, err = _legalized(spec, M, N, self.patch)
+            if legal != spec:
+                warnings.warn(
+                    f"epitome spec for ({M}, {N}) is not kernel-exact; "
+                    f"snapped {spec.m}x{spec.n} -> "
+                    f"{'dense' if legal is None else f'{legal.m}x{legal.n}'} "
+                    f"(snap error {err:.3f})", stacklevel=2)
+            spec = legal
         return EpLayerConfig(spec=spec, mode=self.mode, quant=self._qcfg())
 
     def _qcfg(self) -> Optional[QuantConfig]:
@@ -51,6 +67,34 @@ class EpitomeSettings:
         return QuantConfig(bits=self.quant_bits,
                            per_crossbar=self.quant_per_crossbar,
                            overlap_weighted=self.quant_overlap_weighted)
+
+
+@functools.lru_cache(maxsize=None)
+def _legalized(spec: EpitomeSpec, M: int, N: int, patch: Tuple[int, int]):
+    """Snap an auto-planned spec to the kernel-exact families, returning
+    (legal spec, snap error).  Cached — the same (M, N) site is planned at
+    every traced apply — and warning-free so the caller decides per call
+    whether to surface the snap."""
+    from ..pim.plan import is_kernel_exact, legalize_spec
+    from ..pim.workloads import LayerShape
+    if is_kernel_exact(spec):
+        return spec, 0.0
+    layer = LayerShape(f"{M}x{N}", 1, 1, M, N, 1, kind="fc")
+    return legalize_spec(layer, spec, patch)
+
+
+def layer_name(prefix: str, w: str) -> Optional[str]:
+    """Param-tree path of projection ``w`` under ``prefix`` — the naming
+    contract shared by pim.workloads.lm_layers, ModelConfig.layer_config,
+    and the tree prepack.  None without a prefix: the caller then resolves
+    per-layer config by shape alone."""
+    return f"{prefix}/{w}" if prefix else None
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_config_map(layer_config: Tuple[Tuple[str, EpLayerConfig], ...]):
+    """Dict view of the per-layer tuple (cached: ep() runs per traced op)."""
+    return dict(layer_config)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,11 +156,26 @@ class ModelConfig:
     # the paper's operator
     epitome: EpitomeSettings = EpitomeSettings()
 
+    # per-layer epitome deployment, keyed by param-tree path ("L0/mixer/wq",
+    # "L0/ffn/w_gate", ... — the names pim.workloads.lm_layers emits): an
+    # EpitomePlan's layer_configs() lands here via get_config(plan=...).
+    # Entries override the global ``epitome`` settings for their site;
+    # unlisted sites fall back.  A tuple of (name, EpLayerConfig) pairs so
+    # the config stays hashable (it is a jit static argument).
+    layer_config: Tuple[Tuple[str, EpLayerConfig], ...] = ()
+
     # modality frontend stub ([audio]/[vlm]): inputs are precomputed
     # frame/patch embeddings of this dimension instead of token ids
     embed_inputs: bool = False
 
     def __post_init__(self):
+        if not isinstance(self.layer_config, tuple):
+            # accept a dict / list of pairs; normalize to the hashable form
+            items = (self.layer_config.items()
+                     if isinstance(self.layer_config, dict)
+                     else self.layer_config)
+            object.__setattr__(self, "layer_config",
+                               tuple((str(k), v) for k, v in items))
         if self.n_layers % len(self.pattern) != 0:
             raise ValueError(f"{self.name}: n_layers {self.n_layers} not a "
                              f"multiple of pattern {len(self.pattern)}")
@@ -150,8 +209,21 @@ class ModelConfig:
     def cdtype(self):
         return jnp.dtype(self.compute_dtype)
 
-    def ep(self, M: int, N: int) -> EpLayerConfig:
-        """EpLayerConfig for a weight of virtual shape (M, N)."""
+    def ep(self, M: int, N: int, name: Optional[str] = None) -> EpLayerConfig:
+        """EpLayerConfig for a weight of virtual shape (M, N).
+
+        ``name`` is the layer's param-tree path; when it names an entry of
+        ``layer_config`` (a plan-driven per-layer design) that entry wins,
+        otherwise the global EpitomeSettings plan the site from (M, N)."""
+        if name is not None and self.layer_config:
+            lc = _layer_config_map(self.layer_config).get(name)
+            if lc is not None:
+                if lc.spec is not None and (lc.spec.M, lc.spec.N) != (M, N):
+                    raise ValueError(
+                        f"{self.name}: plan spec for {name} covers "
+                        f"({lc.spec.M}, {lc.spec.N}) but the layer is "
+                        f"({M}, {N})")
+                return lc
         return self.epitome.layer_config(M, N)
 
     # -- parameter counting (MODEL_FLOPS uses 6*N*D / 6*N_active*D) ----------

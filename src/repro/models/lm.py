@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..core.layers import EpLayerConfig, prepack_tree
 from .blocks import (
     apply_group, decode_group, init_group, init_group_state, prefill_group,
 )
@@ -48,6 +49,42 @@ def init_params(key: Array, cfg: ModelConfig) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# Weight-stationary serving: vmapped tree prepack over the group axis
+# ---------------------------------------------------------------------------
+def lm_layer_configs(cfg: ModelConfig) -> Dict[str, EpLayerConfig]:
+    """Every projection site's EpLayerConfig, keyed by param-tree path.
+
+    The enumeration is pim.workloads.lm_layers — the same inventory the LM
+    planners target — so a plan-driven ``cfg.layer_config`` and the global
+    EpitomeSettings fallback both resolve here exactly as they do at each
+    traced apply (init, forward, prepack all agree on specs by name)."""
+    from ..pim.workloads import lm_layers
+    return {l.name: cfg.ep(l.rows, l.cols, l.name) for l in lm_layers(cfg)}
+
+
+def needs_prepack(cfg: ModelConfig) -> bool:
+    """True iff any projection runs the fused kernel x quant path — the
+    combination whose epitome should be packed to int8 once, not
+    re-quantized inside every jitted forward."""
+    return any(lc.is_epitome and lc.quant is not None and lc.mode == "kernel"
+               for lc in lm_layer_configs(cfg).values())
+
+
+def prepack_params(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+    """Pack every kernel x quant epitome in the scanned param tree once.
+
+    ``params["groups"]`` stacks each leaf over a leading group axis, so
+    prepack_tree vmaps the per-layer pack over that axis; the resulting
+    Eq/Es/Ez leaves slice per group inside ``lax.scan`` like every other
+    stacked leaf, and decode feeds the fused int8 kernel pure prepacked
+    codes (weight-stationary serving).  Logits are bit-identical to the
+    on-the-fly path — the same pack just runs once instead of per call."""
+    out = dict(params)
+    out["groups"] = prepack_tree(params["groups"], lm_layer_configs(cfg))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Sharding specs (FSDP over 'data', TP over 'model'; DESIGN.md §5)
 # ---------------------------------------------------------------------------
 def _leaf_spec(path: str, shape: Tuple[int, ...]) -> P:
@@ -63,6 +100,14 @@ def _leaf_spec(path: str, shape: Tuple[int, ...]) -> P:
         return P("data", TENSOR_AXIS)
     if last("/router"):
         return P(None, None)
+
+    # prepacked fused-kernel leaves (prepack_params): the int8 codes Eq are
+    # E-shaped and shard exactly like E; the per-crossbar-tile scale/zero
+    # grids Es/Ez are tiny and replicate
+    if path.endswith("/Eq"):
+        return _leaf_spec(path[:-1], shape)
+    if path.endswith("/Es") or path.endswith("/Ez"):
+        return P(*([None] * len(shape)))
 
     # rwkv channel-mix lives under /ffn/: wk is (d, ff) fan-out, wv is
     # (ff, d) fan-in (the mixer's wk/wv are (d, d) fan-out, handled below)

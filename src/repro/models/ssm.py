@@ -24,9 +24,10 @@ import jax.numpy as jnp
 
 from ..core.layers import apply_linear, init_linear
 from .common import act_fn, shard, BATCH_AXES, TENSOR_AXIS
-from .config import ModelConfig
+from .config import ModelConfig, layer_name as _nm
 
 Array = jax.Array
+
 
 # Dry-run knob: fully unroll chunk scans for XLA cost analysis (while
 # bodies are otherwise counted once).
@@ -36,7 +37,7 @@ UNROLL_CHUNKS = False
 # ===========================================================================
 # RWKV6
 # ===========================================================================
-def init_rwkv(key: Array, cfg: ModelConfig) -> dict:
+def init_rwkv(key: Array, cfg: ModelConfig, prefix: str = "") -> dict:
     d = cfg.d_model
     H = cfg.n_heads
     K = d // H
@@ -54,17 +55,18 @@ def init_rwkv(key: Array, cfg: ModelConfig) -> dict:
         "wd_A": (jax.random.normal(ks[1], (d, ld)) / math.sqrt(d)).astype(dt),
         "wd_B": jnp.zeros((ld, d), dt),
         "u": (jax.random.normal(ks[2], (H, K)) * 0.1).astype(dt),
-        "wr": init_linear(ks[3], d, d, cfg.ep(d, d), dtype=dt),
-        "wk": init_linear(ks[4], d, d, cfg.ep(d, d), dtype=dt),
-        "wv": init_linear(ks[5], d, d, cfg.ep(d, d), dtype=dt),
-        "wg": init_linear(ks[6], d, d, cfg.ep(d, d), dtype=dt),
-        "wo": init_linear(ks[7], d, d, cfg.ep(d, d), dtype=dt),
+        "wr": init_linear(ks[3], d, d, cfg.ep(d, d, _nm(prefix, "wr")), dtype=dt),
+        "wk": init_linear(ks[4], d, d, cfg.ep(d, d, _nm(prefix, "wk")), dtype=dt),
+        "wv": init_linear(ks[5], d, d, cfg.ep(d, d, _nm(prefix, "wv")), dtype=dt),
+        "wg": init_linear(ks[6], d, d, cfg.ep(d, d, _nm(prefix, "wg")), dtype=dt),
+        "wo": init_linear(ks[7], d, d, cfg.ep(d, d, _nm(prefix, "wo")), dtype=dt),
         "ln_x": jnp.ones((d,), dt),
     }
     return p
 
 
-def _rwkv_inputs(p: dict, x: Array, x_prev: Array, cfg: ModelConfig):
+def _rwkv_inputs(p: dict, x: Array, x_prev: Array, cfg: ModelConfig,
+                 prefix: str = ""):
     """Token-shift ddlerp producing (r, k, v, g, logw) — all (B, S, d).
     x_prev: (B, d) last token of the previous chunk/step."""
     B, S, d = x.shape
@@ -81,10 +83,10 @@ def _rwkv_inputs(p: dict, x: Array, x_prev: Array, cfg: ModelConfig):
     xv = x + xx * (mu[3] + lora[2])
     xw = x + xx * (mu[4] + lora[3])
     xg = x + xx * (mu[5] + lora[4])
-    r = apply_linear(p["wr"], xr, cfg.ep(d, d))
-    k = apply_linear(p["wk"], xk, cfg.ep(d, d))
-    v = apply_linear(p["wv"], xv, cfg.ep(d, d))
-    g = jax.nn.silu(apply_linear(p["wg"], xg, cfg.ep(d, d)))
+    r = apply_linear(p["wr"], xr, cfg.ep(d, d, _nm(prefix, "wr")))
+    k = apply_linear(p["wk"], xk, cfg.ep(d, d, _nm(prefix, "wk")))
+    v = apply_linear(p["wv"], xv, cfg.ep(d, d, _nm(prefix, "wv")))
+    g = jax.nn.silu(apply_linear(p["wg"], xg, cfg.ep(d, d, _nm(prefix, "wg"))))
     logw = -jnp.exp(
         (p["w0"].astype(jnp.float32)
          + (jnp.tanh(xw.astype(jnp.float32) @ p["wd_A"].astype(jnp.float32))
@@ -166,7 +168,7 @@ def rwkv_step(r, k, v, logw, u, state):
 
 def rwkv_time_mix(p: dict, x: Array, cfg: ModelConfig,
                   state: Optional[Tuple[Array, Array]] = None,
-                  chunk: int = 0):
+                  chunk: int = 0, prefix: str = ""):
     chunk = chunk or cfg.rwkv_chunk
     """Full RWKV6 time-mixing block.  state = (x_prev (B,d), S (B,H,K,K))."""
     B, S, d = x.shape
@@ -177,7 +179,7 @@ def rwkv_time_mix(p: dict, x: Array, cfg: ModelConfig,
         S0 = jnp.zeros((B, H, K, K), jnp.float32)
     else:
         x_prev, S0 = state
-    r, k, v, g, logw = _rwkv_inputs(p, x, x_prev, cfg)
+    r, k, v, g, logw = _rwkv_inputs(p, x, x_prev, cfg, prefix)
     rh, kh, vh = _heads(r, H), _heads(k, H), _heads(v, H)
     lwh = _heads(logw, H)
     rh = shard(rh, BATCH_AXES, None, TENSOR_AXIS, None)
@@ -196,7 +198,7 @@ def rwkv_time_mix(p: dict, x: Array, cfg: ModelConfig,
     var = o32.var(-1, keepdims=True)
     o = ((o32 - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
     o = (o * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
-    out = apply_linear(p["wo"], o * g, cfg.ep(d, d))
+    out = apply_linear(p["wo"], o * g, cfg.ep(d, d, _nm(prefix, "wo")))
     new_state = (x[:, -1], S1)
     return out, new_state
 
@@ -209,55 +211,61 @@ def init_rwkv_state(cfg: ModelConfig, batch: int, n: int = 1):
 
 
 # -- RWKV channel mixing (the FFN of rwkv blocks) ----------------------------
-def init_rwkv_ffn(key: Array, cfg: ModelConfig) -> dict:
+def init_rwkv_ffn(key: Array, cfg: ModelConfig, prefix: str = "") -> dict:
     d, ff = cfg.d_model, cfg.d_ff
     k1, k2, k3 = jax.random.split(key, 3)
     dt = cfg.pdtype
     return {
         "mu_k": jnp.full((d,), 0.5, dt),
         "mu_r": jnp.full((d,), 0.5, dt),
-        "wk": init_linear(k1, d, ff, cfg.ep(d, ff), dtype=dt),
-        "wv": init_linear(k2, ff, d, cfg.ep(ff, d), dtype=dt),
-        "wr": init_linear(k3, d, d, cfg.ep(d, d), dtype=dt),
+        "wk": init_linear(k1, d, ff, cfg.ep(d, ff, _nm(prefix, "wk")), dtype=dt),
+        "wv": init_linear(k2, ff, d, cfg.ep(ff, d, _nm(prefix, "wv")), dtype=dt),
+        "wr": init_linear(k3, d, d, cfg.ep(d, d, _nm(prefix, "wr")), dtype=dt),
     }
 
 
 def rwkv_channel_mix(p: dict, x: Array, cfg: ModelConfig,
-                     x_prev: Optional[Array] = None):
+                     x_prev: Optional[Array] = None, prefix: str = ""):
     B, S, d = x.shape
     if x_prev is None:
         x_prev = jnp.zeros((B, d), x.dtype)
     xx = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1) - x
     xk = x + xx * p["mu_k"].astype(x.dtype)
     xr = x + xx * p["mu_r"].astype(x.dtype)
-    k = apply_linear(p["wk"], xk, cfg.ep(d, cfg.d_ff))
+    k = apply_linear(p["wk"], xk, cfg.ep(d, cfg.d_ff, _nm(prefix, "wk")))
     k = jnp.square(jax.nn.relu(k))
-    kv = apply_linear(p["wv"], k, cfg.ep(cfg.d_ff, d))
-    r = jax.nn.sigmoid(apply_linear(p["wr"], xr, cfg.ep(d, d)))
+    kv = apply_linear(p["wv"], k, cfg.ep(cfg.d_ff, d, _nm(prefix, "wv")))
+    r = jax.nn.sigmoid(apply_linear(p["wr"], xr, cfg.ep(d, d, _nm(prefix, "wr"))))
     return r * kv, x[:, -1]
 
 
 # ===========================================================================
 # Mamba (jamba's SSM layer)
 # ===========================================================================
-def init_mamba(key: Array, cfg: ModelConfig) -> dict:
+def init_mamba(key: Array, cfg: ModelConfig, prefix: str = "") -> dict:
     d = cfg.d_model
     di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
     dt_rank = max(1, d // 16)
     ks = jax.random.split(key, 7)
     dtp = cfg.pdtype
     return {
-        "in_proj": init_linear(ks[0], d, 2 * di, cfg.ep(d, 2 * di), dtype=dtp),
+        "in_proj": init_linear(ks[0], d, 2 * di,
+                               cfg.ep(d, 2 * di, _nm(prefix, "in_proj")),
+                               dtype=dtp),
         "conv_w": (jax.random.normal(ks[1], (dc, di)) / math.sqrt(dc)).astype(dtp),
         "conv_b": jnp.zeros((di,), dtp),
         "x_proj": init_linear(ks[2], di, dt_rank + 2 * ds,
-                              cfg.ep(di, dt_rank + 2 * ds), dtype=dtp),
-        "dt_proj": init_linear(ks[3], dt_rank, di, cfg.ep(dt_rank, di),
+                              cfg.ep(di, dt_rank + 2 * ds,
+                                     _nm(prefix, "x_proj")), dtype=dtp),
+        "dt_proj": init_linear(ks[3], dt_rank, di,
+                               cfg.ep(dt_rank, di, _nm(prefix, "dt_proj")),
                                bias=True, dtype=dtp),
         "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None],
                                   (di, 1))),
         "D": jnp.ones((di,), jnp.float32),
-        "out_proj": init_linear(ks[4], di, d, cfg.ep(di, d), dtype=dtp),
+        "out_proj": init_linear(ks[4], di, d,
+                                cfg.ep(di, d, _nm(prefix, "out_proj")),
+                                dtype=dtp),
     }
 
 
@@ -274,13 +282,14 @@ def _mamba_scan_chunk(dA, dBx, h0):
 
 def mamba_mix(p: dict, x: Array, cfg: ModelConfig,
               state: Optional[Tuple[Array, Array]] = None,
-              chunk: int = 0):
+              chunk: int = 0, prefix: str = ""):
     chunk = chunk or cfg.mamba_chunk
     """Mamba block.  state = (conv buffer (B, dc-1, di), h (B, di, ds))."""
     B, S, d = x.shape
     di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
     dt_rank = max(1, d // 16)
-    xz = apply_linear(p["in_proj"], x, cfg.ep(d, 2 * di))
+    xz = apply_linear(p["in_proj"], x,
+                      cfg.ep(d, 2 * di, _nm(prefix, "in_proj")))
     xi, z = jnp.split(xz, 2, axis=-1)
     xi = shard(xi, BATCH_AXES, None, TENSOR_AXIS)
     z = shard(z, BATCH_AXES, None, TENSOR_AXIS)
@@ -298,9 +307,11 @@ def mamba_mix(p: dict, x: Array, cfg: ModelConfig,
     new_conv = xpad[:, -(dc - 1):] if dc > 1 else conv_buf
 
     # input-dependent SSM parameters
-    proj = apply_linear(p["x_proj"], xc, cfg.ep(di, dt_rank + 2 * ds))
+    proj = apply_linear(p["x_proj"], xc,
+                        cfg.ep(di, dt_rank + 2 * ds, _nm(prefix, "x_proj")))
     dt, Bp, Cp = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
-    dt = jax.nn.softplus(apply_linear(p["dt_proj"], dt, cfg.ep(dt_rank, di)))
+    dt = jax.nn.softplus(apply_linear(
+        p["dt_proj"], dt, cfg.ep(dt_rank, di, _nm(prefix, "dt_proj"))))
     dt = shard(dt, BATCH_AXES, None, TENSOR_AXIS)
     A = -jnp.exp(p["A_log"])                               # (di, ds)
 
@@ -343,7 +354,8 @@ def mamba_mix(p: dict, x: Array, cfg: ModelConfig,
     y = y.transpose(1, 0, 2, 3).reshape(B, n * L, di)[:, :S]
     y = y + xc.astype(jnp.float32) * p["D"][None, None]
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
-    out = apply_linear(p["out_proj"], y, cfg.ep(di, d))
+    out = apply_linear(p["out_proj"], y,
+                       cfg.ep(di, d, _nm(prefix, "out_proj")))
     return out, (new_conv, h_last)
 
 

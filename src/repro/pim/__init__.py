@@ -8,8 +8,8 @@ into a serializable EpitomePlan and legalizes searched specs to the
 kernel-exact families so they execute through the fused Pallas kernels.
 """
 from .xbar import MappingConfig, count_crossbars, layer_crossbars, make_spec
-from .workloads import (LayerShape, resnet50_layers, resnet101_layers,
-                        tiny_resnet_layers)
+from .workloads import (LayerShape, lm_layers, resnet50_layers,
+                        resnet101_layers, tiny_resnet_layers)
 from .simulator import PimSimulator, SimResult
 from .evo import EvoConfig, encode_individual, evolution_search
 from .plan import (EpitomePlan, LayerPlan, PlanSchemaError, auto_plan,

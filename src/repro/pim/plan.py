@@ -21,6 +21,14 @@ PIMCOMP-style:
     reconstruct.
   * ``ResNetModel.from_plan`` / ``configs.get_resnet(..., plan=...)`` /
     ``launch/plan.py`` consume plans and run them end to end.
+
+LM plans work the same way: every configs/archs.py architecture registers
+a plan arch (``"<arch>"``, plus ``"<arch>-smoke"`` for the reduced smoke
+geometry) whose inventory (``workloads.lm_layers``) enumerates the
+attention/ffn projections per super-block, named by param-tree path.
+``EpitomePlan.layer_configs()`` turns a plan into the per-layer
+``ModelConfig.layer_config`` that ``get_config(..., plan=...)`` installs,
+and ``lm.prepack_params`` serves it weight-stationary.
 """
 from __future__ import annotations
 
@@ -32,18 +40,48 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 from ..core.epitome import EpitomeSpec
 from .evo import EvoConfig, candidate_specs, evolution_search
 from .simulator import PimSimulator, SimResult, default_calibrated_simulator
-from .workloads import (LayerShape, resnet50_layers, resnet101_layers,
-                        tiny_resnet_layers)
+from .workloads import (LayerShape, lm_layers, resnet50_layers,
+                        resnet101_layers, tiny_resnet_layers)
 from .xbar import MappingConfig, count_crossbars, uniform_epitome_specs
 
 PLAN_VERSION = 1
 MODES = ("reconstruct", "wrapped", "folded", "kernel")
+
+# LM plan arches: one per configs/archs.py builder, plus a "<arch>-smoke"
+# variant planning the reduced get_smoke_config geometry (the CPU-testable
+# half of the pipeline).  Kept as a static tuple so this module stays
+# importable without jax; a registry cross-check test guards against drift.
+LM_SMOKE_SUFFIX = "-smoke"
+LM_ARCHS = ("rwkv6-7b", "phi3.5-moe-42b-a6.6b", "grok-1-314b",
+            "jamba-1.5-large-398b", "qwen2-72b", "qwen1.5-110b",
+            "gemma2-2b", "deepseek-67b", "musicgen-large", "internvl2-76b")
+
+
+def is_lm_arch(arch: str) -> bool:
+    base = arch[:-len(LM_SMOKE_SUFFIX)] if arch.endswith(LM_SMOKE_SUFFIX) \
+        else arch
+    return base in LM_ARCHS
+
+
+def _lm_inventory(arch: str):
+    """Zero-arg LayerShape inventory builder for an LM plan arch; imports
+    the config registry lazily so planning stays import-light."""
+    def build() -> List[LayerShape]:
+        from ..configs.registry import get_config, get_smoke_config
+        if arch.endswith(LM_SMOKE_SUFFIX):
+            return lm_layers(get_smoke_config(arch[:-len(LM_SMOKE_SUFFIX)]))
+        return lm_layers(get_config(arch))
+    return build
+
 
 INVENTORIES = {
     "tiny-resnet": tiny_resnet_layers,
     "resnet50": resnet50_layers,
     "resnet101": resnet101_layers,
 }
+INVENTORIES.update({a: _lm_inventory(a) for a in LM_ARCHS})
+INVENTORIES.update({a + LM_SMOKE_SUFFIX: _lm_inventory(a + LM_SMOKE_SUFFIX)
+                    for a in LM_ARCHS})
 
 # Execution patch per arch: the (bm, bn) the legalizer / auto planner snap
 # to.  tiny runs (8, 8) so its reduced layers still epitomize; the full
@@ -54,6 +92,18 @@ EXEC_PATCH = {
     "resnet101": (128, 256),
 }
 
+
+def exec_patch_for(arch: str) -> Tuple[int, int]:
+    """Per-arch execution patch.  LM arches mirror the EpitomeSettings
+    geometry: (256, 256) full scale, (32, 32) for the reduced smoke dims
+    (matching configs.get_smoke_config's patch)."""
+    if arch in EXEC_PATCH:
+        return EXEC_PATCH[arch]
+    if arch.endswith(LM_SMOKE_SUFFIX):
+        return (32, 32)
+    return (256, 256)
+
+
 # Default candidate (m, n) shape menus for the evolution search.
 SEARCH_SHAPES = {
     "tiny-resnet": [(128, 16), (96, 16), (72, 16), (64, 16), (96, 12),
@@ -63,6 +113,18 @@ SEARCH_SHAPES = {
     "resnet101": [(1024, 256), (512, 256), (2048, 256), (256, 256),
                   (1024, 128), (512, 128)],
 }
+LM_SEARCH_SHAPES = [(2048, 256), (1024, 256), (512, 256), (1024, 128),
+                    (512, 128), (256, 256)]
+LM_SMOKE_SEARCH_SHAPES = [(64, 32), (48, 32), (32, 32), (64, 16), (32, 16),
+                          (16, 16)]
+
+
+def search_shapes_for(arch: str) -> List[Tuple[int, int]]:
+    if arch in SEARCH_SHAPES:
+        return SEARCH_SHAPES[arch]
+    if arch.endswith(LM_SMOKE_SUFFIX):
+        return LM_SMOKE_SEARCH_SHAPES
+    return LM_SEARCH_SHAPES
 
 
 def inventory_for(arch: str):
@@ -82,6 +144,10 @@ def simulator_for(arch: str) -> PimSimulator:
     search would degenerate to all-dense."""
     if arch == "tiny-resnet":
         return PimSimulator(MappingConfig(xb_rows=8, xb_cols=8))
+    if arch.endswith(LM_SMOKE_SUFFIX):
+        # smoke LMs run (32, 32) execution patches; scale the crossbar to
+        # match so the #XB budget binds at CPU scale (tiny-resnet rationale)
+        return PimSimulator(MappingConfig(xb_rows=32, xb_cols=32))
     return default_calibrated_simulator()
 
 
@@ -137,6 +203,21 @@ class EpitomePlan:
 
     def is_legalized(self) -> bool:
         return bool(self.provenance.get("legalized", False))
+
+    def layer_configs(self) -> Tuple[Tuple[str, Any], ...]:
+        """The plan as a ``(name, EpLayerConfig)`` tuple — the value
+        ``ModelConfig.layer_config`` consumes, so a plan drives the LM's
+        per-layer {spec, weight_bits, mode} by param-tree path.  Lazy
+        imports keep the planner importable without jax."""
+        from ..core.layers import EpLayerConfig
+        from ..core.quant import QuantConfig
+        out = []
+        for lp in self.layers:
+            q = None if lp.weight_bits is None else QuantConfig(
+                bits=lp.weight_bits)
+            out.append((lp.name,
+                        EpLayerConfig(spec=lp.spec, mode=lp.mode, quant=q)))
+        return tuple(out)
 
     # -- (de)serialization --------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -341,7 +422,7 @@ def legalize_plan(plan: EpitomePlan, *,
     per-layer snap errors are recorded, and the cost is re-simulated so the
     plan's prediction describes the design that will actually run."""
     layers = inventory_for(plan.arch)()
-    patch = tuple(patch or EXEC_PATCH[plan.arch])
+    patch = tuple(patch or exec_patch_for(plan.arch))
     out: List[LayerPlan] = []
     for l, lp in zip(layers, plan.layers):
         legal, err = legalize_spec(l, lp.spec, patch)
@@ -428,7 +509,7 @@ def auto_plan(arch: str, target_cr: float = 2.0, *,
               act_bits: Optional[int] = None) -> EpitomePlan:
     """CR-targeted kernel-exact design (what tiny_resnet specs='auto' and
     the registry variants run) as a plan.  Born legal: snap error 0."""
-    patch = tuple(patch or EXEC_PATCH[arch])
+    patch = tuple(patch or exec_patch_for(arch))
     specs = plan_conv_specs(inventory_for(arch)(), target_cr=target_cr,
                             patch=patch)
     plan = plan_from_specs(arch, specs, weight_bits=weight_bits, mode=mode,
@@ -457,11 +538,11 @@ def search_plan(arch: str, *, objective: str = "latency",
     layers = inventory_for(arch)()
     sim = simulator or simulator_for(arch)
     cfg = dataclasses.replace(evo or EvoConfig(), objective=objective)
-    shapes = list(shapes or SEARCH_SHAPES[arch])
+    shapes = list(shapes or search_shapes_for(arch))
     cands = [candidate_specs(l, sim.mapping, shapes) for l in layers]
 
     if seed_plan is None:
-        seed_specs = plan_conv_specs(layers, patch=EXEC_PATCH[arch])
+        seed_specs = plan_conv_specs(layers, patch=exec_patch_for(arch))
     else:
         if seed_plan.arch != arch:
             raise ValueError(f"seed plan is for {seed_plan.arch}, not {arch}")
