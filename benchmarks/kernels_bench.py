@@ -196,6 +196,65 @@ def lm_plan(emit) -> None:
          f"xbars={plan.predicted['xbars']}")
 
 
+def sharded_plan(emit) -> None:
+    """Sharded weight-stationary serving smoke (the placement half of the
+    plan pipeline): the packed int8 codes of an auto-planned smoke LM are
+    laid out across a (data, model) host mesh by the plan's per-layer
+    placement records and served through the scan-over-groups decode.  The
+    derived column carries the mesh that ran, warm tok/s sharded vs
+    single-device, and the bit-identity flag — the placement defaults are
+    column-parallel exactly so sharded logits match the single-device path
+    bit for bit.  Needs >= 2 devices (CI forces 8 CPU host devices via
+    XLA_FLAGS); on one device it emits a skip row."""
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import mesh_for_plan
+    from repro.launch.serve import _warm_tok_s, generate
+    from repro.models import lm
+    from repro.models.common import set_mesh
+    from repro.pim.plan import auto_plan
+
+    arch = "rwkv6-7b"
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        emit(f"kernels/plan-sharded-{arch}-smoke-q3", 0.0,
+             f"skipped=single-device;devices={n_dev}")
+        return
+    plan = auto_plan(f"{arch}-smoke", target_cr=2.0, weight_bits=3,
+                     mode="kernel")
+    cfg = get_smoke_config(arch, plan=plan)
+    key = jax.random.PRNGKey(0)
+    init_key, prompt_key, sample_key = jax.random.split(key, 3)
+    params = lm.init_params(init_key, cfg)
+    B, P, gen = 2, 8, 8
+    prompts = jax.random.randint(prompt_key, (B, P), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    try:
+        set_mesh(None)
+        packed = lm.prepack_params(params, cfg)
+        toks_ref, _ = generate(packed, cfg, prompts, P + gen + 1, gen)
+        tok_s_single = _warm_tok_s(packed, cfg, prompts, P + gen + 1, gen,
+                                   0.0, sample_key)
+        data, model = 2, n_dev // 2
+        mesh = mesh_for_plan(plan, data=data, model=model)
+        set_mesh(mesh)
+        sharded = lm.prepack_params(params, cfg, mesh=mesh)
+        toks_sh, _ = generate(sharded, cfg, prompts, P + gen + 1, gen)
+        identical = bool(np.array_equal(np.asarray(toks_ref),
+                                        np.asarray(toks_sh)))
+        assert identical, "sharded decode drifted from single-device"
+        tok_s_sharded = _warm_tok_s(sharded, cfg, prompts, P + gen + 1, gen,
+                                    0.0, sample_key)
+    finally:
+        set_mesh(None)
+    emit(f"kernels/plan-sharded-{arch}-smoke-q3",
+         (time.perf_counter() - t0) * 1e6,
+         f"mesh={data}x{model};devices={n_dev};bit_identical={identical};"
+         f"tok_s_sharded={tok_s_sharded:.1f};tok_s_single={tok_s_single:.1f};"
+         f"epitomized={plan.n_epitomized}/{len(plan.layers)}")
+
+
 def quant_epitome(emit) -> None:
     """The flagship fused path (int8-packed quantized epitome) against the
     execution ladder it replaces: reconstruct / wrapped / fp kernel.

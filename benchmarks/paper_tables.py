@@ -102,6 +102,49 @@ def table1(emit) -> None:
              f"snap_err_max={plan.snap_err_max:.3f};{meas}")
 
 
+def tiny(emit) -> None:
+    """Calibrated tiny-(8, 8) predicted-vs-measured rows.
+
+    The tiny simulator's latency coefficients are fitted to measured
+    interpret-mode wall times (pim.tables.TINY_CALIBRATION, with
+    provenance), so these rows compare on the same scale — unlike the
+    ResNet-50 rows above, whose prediction is PIM hardware (Table-1
+    calibrated) and whose measurement is a CPU interpreter.  Geometry
+    matches the calibration anchors: batch=2, hw=16."""
+    import jax
+    from repro.models.resnet import tiny_resnet
+    from repro.pim.plan import auto_plan, inventory_for, simulator_for
+    from repro.pim.tables import TINY_CALIBRATION as tc
+
+    sim = simulator_for("tiny-resnet")
+    layers = inventory_for("tiny-resnet")()
+
+    # dense anchor
+    model = tiny_resnet(specs=None)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (tc.batch, tc.hw, tc.hw, 3))
+    apply = jax.jit(model.apply)
+    jax.block_until_ready(apply(params, x))
+    t0 = time.perf_counter()
+    jax.block_until_ready(apply(params, x))
+    wall_d = time.perf_counter() - t0
+    pred_d = sim.simulate(layers).latency
+    emit("tiny/dense", wall_d * 1e6,
+         f"pred_ms={pred_d*1e3:.3f};meas_ms={wall_d*1e3:.3f};"
+         f"ratio={pred_d/wall_d:.2f};calib=pim.tables.TINY_CALIBRATION")
+
+    # the auto-planned kernel x q3 design (the other calibration anchor;
+    # act_bits=9 matches the counters the calibration fitted A against)
+    plan = auto_plan("tiny-resnet", target_cr=2.0, weight_bits=3,
+                     mode="kernel", act_bits=9)
+    wall_e = _measured_wall_s(plan, batch=tc.batch, hw=tc.hw)
+    pred_e = plan.predicted["latency_s"]
+    emit("tiny/plan-auto-q3", wall_e * 1e6,
+         f"pred_ms={pred_e*1e3:.3f};meas_ms={wall_e*1e3:.3f};"
+         f"ratio={pred_e/wall_e:.2f};"
+         f"epitomized={plan.n_epitomized}/{len(plan.layers)}")
+
+
 def table2(emit) -> None:
     """Quantization ablation: MSE proxy (lower = better accuracy direction)
     + trained tiny-task accuracy for the three quantizer variants."""

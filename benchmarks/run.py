@@ -68,12 +68,16 @@ def main() -> None:
         "table2": paper_tables.table2,
         "table3": paper_tables.table3,
         "fig4": paper_tables.fig4,
+        "tiny": paper_tables.tiny,
         "kernels": lambda e: (kernels_bench.epitome_modes(e),
                               kernels_bench.pallas_interpret_correctness(e),
                               kernels_bench.quant_epitome(e),
                               kernels_bench.conv_quant_epitome(e),
                               kernels_bench.legalized_plan(e),
                               kernels_bench.lm_plan(e)),
+        # sharded serving smoke: meaningful when the process has > 1
+        # device (CI forces 8 CPU host devices via XLA_FLAGS)
+        "sharded": kernels_bench.sharded_plan,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

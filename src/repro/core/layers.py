@@ -56,6 +56,7 @@ from .epitome import (
     reconstruct,
     wrapped_matmul,
 )
+from .placement import LayerPlacement
 from .quant import QuantConfig, fake_quant
 
 Array = jax.Array
@@ -67,6 +68,7 @@ class EpLayerConfig:
     spec: Optional[EpitomeSpec] = None       # None -> dense layer
     mode: str = "wrapped"                    # reconstruct | wrapped | kernel
     quant: Optional[QuantConfig] = None      # None -> fp weights
+    placement: Optional[LayerPlacement] = None   # None -> role-based default
 
     @property
     def is_epitome(self) -> bool:
@@ -164,8 +166,66 @@ def prepack_linear(params: dict, cfg: EpLayerConfig) -> dict:
     return out
 
 
+def placement_pspec(placement: Optional[LayerPlacement], leaf: str,
+                    ndim: int):
+    """PartitionSpec of one layer-subdict leaf under a LayerPlacement.
+
+    The last two dims of E / W / Eq are (rows, cols) — they map to
+    (row_axis, col_axis); leading dims (the scan-over-groups stack axis)
+    replicate.  The per-crossbar-tile Es/Ez scale grids follow the codes
+    only when ``scales == 'shard'``; a bias shards its single (cols) dim.
+    Anything else (norm vectors, LoRAs, ...) replicates."""
+    from jax.sharding import PartitionSpec as P
+    if placement is None:
+        return P(*([None] * ndim))
+    row, col = placement.row_axis, placement.col_axis
+    if leaf in ("E", "W", "Eq") and ndim >= 2:
+        return P(*([None] * (ndim - 2)), row, col)
+    if leaf in ("Es", "Ez") and ndim >= 2 and placement.scales == "shard":
+        return P(*([None] * (ndim - 2)), row, col)
+    if leaf == "b" and ndim >= 1:
+        return P(*([None] * (ndim - 1)), col)
+    return P(*([None] * ndim))
+
+
+def constrained_sharding(mesh, pspec, shape):
+    """NamedSharding with axes dropped when absent from the mesh or when
+    they do not divide the corresponding dim (the divisibility snap the
+    placement legalizer applies to plan artifacts, enforced again at the
+    array layer so a stale annotation degrades to replicated instead of
+    crashing device_put)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    names = set(mesh.axis_names)
+    fixed = []
+    for i, s in enumerate(pspec):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = s if isinstance(s, (tuple, list)) else (s,)
+        axes = tuple(a for a in axes if a in names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        ok = axes and shape[i] % size == 0
+        fixed.append((axes if len(axes) > 1 else axes[0]) if ok else None)
+    return NamedSharding(mesh, P(*fixed))
+
+
+def _place_layer(leaves: dict, cfg: EpLayerConfig, mesh) -> dict:
+    """Lay one (possibly prepacked) layer subdict out on ``mesh`` per the
+    config's placement record.  Layers without a placement pass through
+    untouched (forcing them replicated here would be a pure memory tax —
+    the caller's fallback spec machinery owns them)."""
+    if cfg.placement is None:
+        return leaves
+    return {k: jax.device_put(
+                v, constrained_sharding(
+                    mesh, placement_pspec(cfg.placement, k, v.ndim), v.shape))
+            for k, v in leaves.items()}
+
+
 def prepack_tree(params, layer_configs: Mapping[str, EpLayerConfig],
-                 *, stacked: bool = True):
+                 *, stacked: bool = True, mesh=None):
     """Tree variant of ``prepack_linear`` for scan-over-groups params.
 
     Walks a param pytree (e.g. the LM's ``params["groups"]``) and, for
@@ -176,17 +236,28 @@ def prepack_tree(params, layer_configs: Mapping[str, EpLayerConfig],
     Eq/Es/Ez leaves then carry the same leading axis and slice per group
     inside ``lax.scan`` exactly like E does.  Everything else — dense
     layers, norms, paths the mapping does not name — passes through
-    untouched."""
+    untouched.
+
+    With ``mesh``, every layer subdict named by ``layer_configs`` is
+    additionally laid out with a NamedSharding from its placement record
+    (plan-driven sharded weight-stationary serving): the packed int8 codes
+    land sharded over the annotated mesh axes instead of being packed
+    replicated and re-laid-out afterwards."""
     def walk(tree, path):
         if not isinstance(tree, dict):
             return tree
-        if "E" in tree:                      # an epitome linear layer
+        if "E" in tree or "W" in tree:       # a linear/conv layer subdict
             cfg = layer_configs.get(path)
-            if cfg is None or not (cfg.is_epitome and cfg.quant is not None
-                                   and cfg.mode == "kernel"):
+            if cfg is None:
                 return tree
-            pack = lambda p: prepack_linear(p, cfg)
-            return jax.vmap(pack)(tree) if stacked else pack(tree)
+            out = tree
+            if (cfg.is_epitome and cfg.quant is not None
+                    and cfg.mode == "kernel"):
+                pack = lambda p: prepack_linear(p, cfg)
+                out = jax.vmap(pack)(tree) if stacked else pack(tree)
+            if mesh is not None:
+                out = _place_layer(out, cfg, mesh)
+            return out
         return {k: walk(v, f"{path}/{k}" if path else k)
                 for k, v in tree.items()}
     return walk(params, "")

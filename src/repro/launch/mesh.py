@@ -4,6 +4,9 @@ Defined as FUNCTIONS so importing this module never touches jax device
 state (jax locks the device count on first backend init)."""
 from __future__ import annotations
 
+import warnings
+from typing import Tuple
+
 import jax
 
 
@@ -28,11 +31,51 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    """Small mesh over whatever devices exist (tests / CPU examples).
+
+    The requested (data, model) shape is clamped to the available device
+    count — with a warning when it degrades, so smoke tok/s numbers are
+    attributable to the mesh that actually ran rather than the one that
+    was asked for."""
     n = len(jax.devices())
-    data = min(data, n)
+    want = (data, model)
+    data = max(1, min(data, n))
     model = max(1, min(model, n // data))
+    if (data, model) != want:
+        warnings.warn(
+            f"requested mesh (data, model)={want} clamped to "
+            f"({data}, {model}): only {n} device(s) available",
+            stacklevel=2)
     return compat_make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh(flag: str) -> Tuple[int, int]:
+    """Parse a ``--mesh DATA,MODEL`` flag value (e.g. ``2,4``)."""
+    try:
+        data, model = (int(v) for v in flag.split(","))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'DATA,MODEL' (e.g. 2,4), got {flag!r}") from None
+    if data < 1 or model < 1:
+        raise ValueError(f"--mesh sizes must be >= 1, got {flag!r}")
+    return data, model
+
+
+def mesh_for_plan(plan, data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Build the (data, model) host mesh an EpitomePlan will serve on, and
+    legalize the plan's placement annotations against it: every annotated
+    axis must exist in the mesh and divide the layer's (m, n) — offenders
+    are reported (they degrade to replicated at the array layer).  Returns
+    the mesh; the plan object is not mutated, so the same artifact can be
+    re-checked against a different mesh."""
+    from ..pim.plan import legalize_placements
+    mesh = make_host_mesh(data=data, model=model)
+    shape = dict(mesh.shape)
+    _, report = legalize_placements(plan, shape)
+    for name, reasons in report.items():
+        warnings.warn(f"plan {plan.arch!r} layer {name!r}: "
+                      + "; ".join(reasons), stacklevel=2)
+    return mesh
 
 
 # TPU v5e-class hardware constants (per chip) used by the roofline

@@ -58,7 +58,12 @@ def cmd_legalize(args) -> None:
     from ..pim.plan import legalize_plan
     plan = _load(args.plan)
     patch = tuple(int(v) for v in args.patch.split("x")) if args.patch else None
-    legal = legalize_plan(plan, patch=patch)
+    mesh_shape = None
+    if args.mesh:
+        from .mesh import parse_mesh
+        data, model = parse_mesh(args.mesh)
+        mesh_shape = {"data": data, "model": model}
+    legal = legalize_plan(plan, patch=patch, mesh_shape=mesh_shape)
     legal.save(args.out)
     pred = legal.predicted
     print(f"[plan] legalized {plan.arch}: snap error "
@@ -66,6 +71,10 @@ def cmd_legalize(args) -> None:
           f"mean={legal.snap_err_mean:.3f}; re-simulated "
           f"{pred['latency_s']*1e3:.3f}ms / {pred['energy_j']*1e3:.3f}mJ / "
           f"{pred['xbars']} XBs")
+    fb = legal.provenance.get("placement_fallbacks") or {}
+    if fb:
+        for name, reasons in fb.items():
+            print(f"[plan] placement fallback {name}: {'; '.join(reasons)}")
     print(f"[plan] saved -> {args.out}")
 
 
@@ -80,20 +89,33 @@ def cmd_show(args) -> None:
         print(f"predicted: latency={p['latency_s']*1e3:.3f}ms "
               f"energy={p['energy_j']*1e3:.3f}mJ xbars={p['xbars']} "
               f"util={p['utilization']*100:.1f}%")
-    print(f"{'layer':<18} {'bits':>4} {'mode':<11} {'snap':>6}  spec")
+    print(f"{'layer':<18} {'bits':>4} {'mode':<11} {'snap':>6} "
+          f"{'placement':<16} spec")
     for lp in plan.layers:
+        pl = lp.placement
+        where = "-" if pl is None else \
+            f"{pl.row_axis or '.'}x{pl.col_axis or '.'}/{pl.scales[:4]}"
         print(f"{lp.name:<18} {lp.weight_bits or '-':>4} {lp.mode:<11} "
-              f"{lp.snap_err:>6.3f}  {_fmt_spec(lp.spec)}")
+              f"{lp.snap_err:>6.3f} {where:<16} {_fmt_spec(lp.spec)}")
 
 
 def _run_lm(plan, args) -> None:
     """Execute a legalized LM plan: plan-driven smoke config, vmapped tree
-    prepack, scan-over-groups decode through the fused int8 kernel."""
+    prepack, scan-over-groups decode through the fused int8 kernel.
+
+    With ``--mesh DATA,MODEL`` the packed codes are laid out across the
+    host mesh by the plan's per-layer placement and served sharded; the
+    sharded logits are asserted bit-identical to the single-device
+    prepacked path (the placement defaults are column-parallel exactly so
+    this holds)."""
     import jax
+    import numpy as np
     from ..configs import get_smoke_config
     from ..models import lm
+    from ..models.common import set_mesh
     from ..pim.plan import LM_SMOKE_SUFFIX
-    from .serve import _warm_tok_s
+    from .mesh import mesh_for_plan, parse_mesh
+    from .serve import _prefill, _warm_tok_s, generate
 
     if not plan.arch.endswith(LM_SMOKE_SUFFIX):
         raise SystemExit(
@@ -111,6 +133,28 @@ def _run_lm(plan, args) -> None:
     max_len = P + gen + 1
     print(f"[plan] {plan.arch}: {plan.n_epitomized}/{len(plan.layers)} "
           f"projections epitomized, prepacked={packed is not None}")
+    if args.mesh:
+        served = packed if packed is not None else params
+        ref_toks, _ = generate(served, cfg, prompts, max_len, gen)
+        ref_state = lm.init_decode_state(cfg, B, max_len)
+        ref_logits, _ = _prefill(served, prompts, ref_state, cfg)
+        data, model = parse_mesh(args.mesh)
+        mesh = mesh_for_plan(plan, data=data, model=model)
+        set_mesh(mesh)
+        print(f"[plan] mesh: {dict(mesh.shape)} over "
+              f"{len(jax.devices())} device(s)")
+        packed = lm.prepack_params(params, cfg, mesh=mesh)
+        sh_state = lm.init_decode_state(cfg, B, max_len)
+        sh_logits, _ = _prefill(packed, prompts, sh_state, cfg)
+        sh_toks, _ = generate(packed, cfg, prompts, max_len, gen)
+        logits_ok = bool(np.array_equal(np.asarray(ref_logits),
+                                        np.asarray(sh_logits)))
+        toks_ok = bool(np.array_equal(np.asarray(ref_toks),
+                                      np.asarray(sh_toks)))
+        print(f"[plan] sharded vs single-device: logits bit-identical="
+              f"{logits_ok} tokens bit-identical={toks_ok}")
+        assert logits_ok and toks_ok, \
+            "sharded serving drifted from the single-device prepacked path"
     tw = lambda p: _warm_tok_s(p, cfg, prompts, max_len, gen, 0.0, sample_key)
     warm = tw(packed if packed is not None else params)
     pred = plan.predicted or {}
@@ -135,6 +179,10 @@ def cmd_run(args) -> None:
     if is_lm_arch(plan.arch):
         _run_lm(plan, args)
         return
+    if args.mesh:
+        raise SystemExit("--mesh applies to LM plans (sharded "
+                         "weight-stationary serving); ResNet plans run "
+                         "single-device")
     from ..models.resnet import ResNetModel
     model = ResNetModel.from_plan(plan)
     # the contract of the pipeline: what runs IS what was planned
@@ -189,6 +237,9 @@ def main() -> None:
     s.add_argument("--plan", required=True)
     s.add_argument("--patch", default="",
                    help="execution patch 'BMxBN' (default: per-arch)")
+    s.add_argument("--mesh", default="",
+                   help="'DATA,MODEL': also snap placement annotations to "
+                        "this mesh's divisibility constraints")
     s.add_argument("--out", default="plan_legal.json")
     s.set_defaults(fn=cmd_legalize)
 
@@ -199,6 +250,10 @@ def main() -> None:
     s = sub.add_parser("run",
                        help="execute a legalized plan through the fused kernel")
     s.add_argument("--plan", required=True)
+    s.add_argument("--mesh", default="",
+                   help="'DATA,MODEL' host mesh (e.g. 2,4): serve the LM "
+                        "plan sharded by its placement records and assert "
+                        "bit-identity vs the single-device path")
     s.add_argument("--batch", type=int, default=2)
     s.add_argument("--hw", type=int, default=16, help="input spatial size")
     s.add_argument("--iters", type=int, default=2)

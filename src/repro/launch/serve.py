@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from ..configs import get_config, get_smoke_config
 from ..models import lm
 from ..models.common import set_mesh
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, mesh_for_plan, parse_mesh
 
 
 def _select(logits, key, temperature, sampled: bool):
@@ -102,6 +102,10 @@ def main():
     ap.add_argument("--plan", default="",
                     help="EpitomePlan JSON driving per-layer epitome "
                          "specs/bits/mode (arch '<arch>-smoke' with --smoke)")
+    ap.add_argument("--mesh", default="",
+                    help="'DATA,MODEL' host mesh shape (e.g. 2,4) for "
+                         "sharded serving; default: pure data parallelism "
+                         "over all devices")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -111,19 +115,37 @@ def main():
                     help="0 = greedy; > 0 samples every generated token")
     args = ap.parse_args()
 
-    plan = args.plan or None
+    plan = None
+    if args.plan:
+        from ..pim.plan import EpitomePlan
+        plan = EpitomePlan.load(args.plan)
     cfg = (get_smoke_config(args.arch, args.epitome, plan=plan) if args.smoke
            else get_config(args.arch, args.epitome, plan=plan))
-    set_mesh(make_host_mesh(data=len(jax.devices())))
+    if args.mesh:
+        data, model = parse_mesh(args.mesh)
+        mesh = (mesh_for_plan(plan, data=data, model=model) if plan is not None
+                else make_host_mesh(data=data, model=model))
+    else:
+        mesh = make_host_mesh(data=len(jax.devices()))
+    set_mesh(mesh)
+    # the mesh that actually runs (make_host_mesh clamps to the device
+    # count), so the smoke tok/s numbers below are attributable
+    print(f"[serve] mesh: {dict(mesh.shape)} over "
+          f"{len(jax.devices())} device(s)")
     # independent streams for params / prompts / sampling (one shared key
     # would correlate the prompt draw with the weight init)
     init_key, prompt_key, sample_key = jax.random.split(
         jax.random.PRNGKey(args.seed), 3)
     params = lm.init_params(init_key, cfg)
     # weight-stationary serving: kernel x quant epitomes pack to int8 once
-    # here; without this every jitted forward re-quantized every epitome,
-    # forfeiting the storage/bandwidth win the quantized epitomes exist for
-    packed = lm.prepack_params(params, cfg) if lm.needs_prepack(cfg) else None
+    # here — laid out across the mesh by the plan's per-layer placement when
+    # --mesh names one; without the prepack every jitted forward would
+    # re-quantize every epitome, forfeiting the storage/bandwidth win
+    shard_mesh = mesh if args.mesh else None
+    packed = (lm.prepack_params(params, cfg, mesh=shard_mesh)
+              if lm.needs_prepack(cfg) else None)
+    if shard_mesh is not None:
+        params = lm.shard_params(params, cfg, shard_mesh)
     prompts = jax.random.randint(prompt_key, (args.batch, args.prompt_len),
                                  0, cfg.vocab)
     label = args.plan if args.plan else args.epitome

@@ -65,23 +65,15 @@ def clean_spec(*spec) -> P:
 def shard(x: Array, *spec) -> Array:
     """with_sharding_constraint that no-ops without an installed mesh and
     drops axes that don't divide the corresponding dim (e.g. 8 KV heads on a
-    16-way tensor axis) instead of forcing XLA to pad."""
+    16-way tensor axis) instead of forcing XLA to pad — the same
+    degrade-to-replicated rule core.layers.constrained_sharding applies to
+    placement-driven param layouts."""
     mesh = _CURRENT_MESH
     if mesh is None:
         return x
-    ps = clean_spec(*spec)
-    fixed = []
-    for i, s in enumerate(ps):
-        if s is None:
-            fixed.append(None)
-            continue
-        axes = s if isinstance(s, tuple) else (s,)
-        size = 1
-        for a in axes:
-            size *= mesh.shape[a]
-        fixed.append(s if x.shape[i] % size == 0 else None)
-    sharding = jax.sharding.NamedSharding(mesh, P(*fixed))
-    return jax.lax.with_sharding_constraint(x, sharding)
+    from ..core.layers import constrained_sharding
+    return jax.lax.with_sharding_constraint(
+        x, constrained_sharding(mesh, P(*spec), x.shape))
 
 
 def batch_spec(extra: int = 0):

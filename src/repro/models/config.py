@@ -159,6 +159,9 @@ class ModelConfig:
     # per-layer epitome deployment, keyed by param-tree path ("L0/mixer/wq",
     # "L0/ffn/w_gate", ... — the names pim.workloads.lm_layers emits): an
     # EpitomePlan's layer_configs() lands here via get_config(plan=...).
+    # Each EpLayerConfig carries {spec, mode, quant, placement} — placement
+    # (core.placement.LayerPlacement) says which mesh axes the layer's m/n
+    # dims shard over, and drives lm.param_specs / the prepack layout.
     # Entries override the global ``epitome`` settings for their site;
     # unlisted sites fall back.  A tuple of (name, EpLayerConfig) pairs so
     # the config stays hashable (it is a jit static argument).

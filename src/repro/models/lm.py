@@ -10,7 +10,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.layers import EpLayerConfig, prepack_tree
+from ..core.layers import (
+    EpLayerConfig, constrained_sharding, placement_pspec, prepack_tree,
+)
 from .blocks import (
     apply_group, decode_group, init_group, init_group_state, prefill_group,
 )
@@ -70,7 +72,8 @@ def needs_prepack(cfg: ModelConfig) -> bool:
                for lc in lm_layer_configs(cfg).values())
 
 
-def prepack_params(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
+def prepack_params(params: Dict[str, Any], cfg: ModelConfig,
+                   mesh=None) -> Dict[str, Any]:
     """Pack every kernel x quant epitome in the scanned param tree once.
 
     ``params["groups"]`` stacks each leaf over a leading group axis, so
@@ -78,14 +81,32 @@ def prepack_params(params: Dict[str, Any], cfg: ModelConfig) -> Dict[str, Any]:
     Eq/Es/Ez leaves slice per group inside ``lax.scan`` like every other
     stacked leaf, and decode feeds the fused int8 kernel pure prepacked
     codes (weight-stationary serving).  Logits are bit-identical to the
-    on-the-fly path — the same pack just runs once instead of per call."""
+    on-the-fly path — the same pack just runs once instead of per call.
+
+    With ``mesh``, prepack_tree lays the packed codes of placement-carrying
+    layers out with a NamedSharding from the plan as they are produced, and
+    shard_params covers the rest of the tree (embed / head / norms, and
+    layers without a placement record) with the bit-exact serving specs —
+    one call produces a fully sharded weight-stationary param tree.
+    shard_params resolves the placement-carrying layers to the identical
+    shardings prepack_tree already applied, so its device_put on those
+    leaves is a no-op."""
     out = dict(params)
-    out["groups"] = prepack_tree(params["groups"], lm_layer_configs(cfg))
+    out["groups"] = prepack_tree(params["groups"], lm_layer_configs(cfg),
+                                 mesh=mesh)
+    if mesh is not None:
+        out = shard_params(out, cfg, mesh)
     return out
 
 
 # ---------------------------------------------------------------------------
 # Sharding specs (FSDP over 'data', TP over 'model'; DESIGN.md §5)
+#
+# Resolution order (param_specs): a layer named by the plan-driven
+# ``cfg.layer_config`` with a placement record is sharded exactly as the
+# plan says (placement_pspec); everything else falls back to the
+# hard-coded role rules below — _leaf_spec (training FSDP x TP) or
+# _serving_leaf_spec (bit-exact column-parallel serving).
 # ---------------------------------------------------------------------------
 def _leaf_spec(path: str, shape: Tuple[int, ...]) -> P:
     """Spec by parameter role.  Fan-in is FSDP-sharded over 'data', fan-out
@@ -139,15 +160,70 @@ def _leaf_spec(path: str, shape: Tuple[int, ...]) -> P:
     return P(*([None] * len(shape)))
 
 
-def param_specs(cfg: ModelConfig, params_shape: Dict[str, Any]) -> Dict[str, Any]:
-    """PartitionSpec tree matching the params tree (built from eval_shape)."""
+def _serving_leaf_spec(path: str, shape: Tuple[int, ...]) -> P:
+    """Bit-exact serving default for layers no plan names: the role-based
+    column-parallel placement (core.placement.default_placement) applied by
+    path.  Only output dims shard — contraction (fan-in) dims replicate, so
+    the sharded logits stay bit-identical to the single-device path (row
+    sharding reorders the partial-sum accumulation)."""
+    from ..core.placement import default_placement
+    if path.endswith("/embed"):
+        # (vocab, d): vocab rows gather exactly; d is every matmul's
+        # contraction dim (and the tied head's) — keep it whole
+        return P(TENSOR_AXIS, None)
+    if path.endswith("/head"):
+        return P(None, TENSOR_AXIS)
+    if path.endswith("/router"):
+        return P(None, None)
+    name, _, leaf = path.rpartition("/")
+    name = name[len("/groups/"):] if name.startswith("/groups/") else name
+    if leaf in ("E", "W", "Eq", "Es", "Ez", "b") and name:
+        return placement_pspec(default_placement(name), leaf, len(shape))
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, params_shape: Dict[str, Any], *,
+                serving: bool = False) -> Dict[str, Any]:
+    """PartitionSpec tree matching the params tree (built from eval_shape).
+
+    Layers the plan-driven ``cfg.layer_config`` names are sharded by their
+    placement record; unlisted leaves fall back to the hard-coded role
+    rules — FSDP x TP for training, or the bit-exact column-parallel
+    serving layout when ``serving=True``."""
+    placements = {name: lc.placement for name, lc in cfg.layer_config
+                  if lc.placement is not None}
+    fallback = _serving_leaf_spec if serving else _leaf_spec
+
+    def leaf_spec(prefix, shape):
+        name, _, leaf = prefix.rpartition("/")
+        if name.startswith("/groups/"):
+            pl = placements.get(name[len("/groups/"):])
+            if pl is not None:
+                return placement_pspec(pl, leaf, len(shape))
+        return fallback(prefix, shape)
+
     def walk(tree, prefix):
         if isinstance(tree, dict):
             return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
         if isinstance(tree, tuple):
             return tuple(walk(v, f"{prefix}/{i}") for i, v in enumerate(tree))
-        return _leaf_spec(prefix, tree.shape)
+        return leaf_spec(prefix, tree.shape)
     return walk(params_shape, "")
+
+
+def shard_params(params: Dict[str, Any], cfg: ModelConfig,
+                 mesh) -> Dict[str, Any]:
+    """Lay a (possibly prepacked) param tree out on ``mesh`` for serving:
+    plan placements where the config carries them, the bit-exact serving
+    defaults elsewhere.  Axes that do not divide their dim degrade to
+    replicated (constrained_sharding) instead of crashing."""
+    specs = param_specs(cfg, jax.eval_shape(lambda: params), serving=True)
+    # params leads the tree.map, so each of its array leaves picks up the
+    # corresponding PartitionSpec from the specs tree whole
+    return jax.tree.map(
+        lambda leaf, sp: jax.device_put(
+            leaf, constrained_sharding(mesh, sp, leaf.shape)),
+        params, specs)
 
 
 # ---------------------------------------------------------------------------

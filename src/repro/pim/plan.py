@@ -38,13 +38,17 @@ import math
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from ..core.epitome import EpitomeSpec
+from ..core.placement import (LayerPlacement, MESH_AXES, SCALE_MODES,
+                              default_placement, snap_placement)
 from .evo import EvoConfig, candidate_specs, evolution_search
-from .simulator import PimSimulator, SimResult, default_calibrated_simulator
+from .simulator import (PimSimulator, SimResult, default_calibrated_simulator,
+                        tiny_calibrated_simulator)
 from .workloads import (LayerShape, lm_layers, resnet50_layers,
                         resnet101_layers, tiny_resnet_layers)
 from .xbar import MappingConfig, count_crossbars, uniform_epitome_specs
 
-PLAN_VERSION = 1
+# version 2: per-layer placement records (PR 5)
+PLAN_VERSION = 2
 MODES = ("reconstruct", "wrapped", "folded", "kernel")
 
 # LM plan arches: one per configs/archs.py builder, plus a "<arch>-smoke"
@@ -141,9 +145,12 @@ def simulator_for(arch: str) -> PimSimulator:
     calibrated on the paper's Table-1 anchors; tiny-resnet scales the
     crossbar down to its (8, 8) execution patch — with 128x256 crossbars
     every tiny layer fits one tile and the #XB budget never binds, so the
-    search would degenerate to all-dense."""
+    search would degenerate to all-dense.  The tiny latency coefficients
+    are calibrated against measured interpret-mode wall times (see
+    pim.tables.TINY_CALIBRATION) so predicted-vs-measured benchmark rows
+    are comparable, not just directional."""
     if arch == "tiny-resnet":
-        return PimSimulator(MappingConfig(xb_rows=8, xb_cols=8))
+        return tiny_calibrated_simulator()
     if arch.endswith(LM_SMOKE_SUFFIX):
         # smoke LMs run (32, 32) execution patches; scale the crossbar to
         # match so the #XB budget binds at CPU scale (tiny-resnet rationale)
@@ -156,13 +163,15 @@ def simulator_for(arch: str) -> PimSimulator:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
-    """One layer's deployment record: what runs, at which bits, how."""
+    """One layer's deployment record: what runs, at which bits, how — and
+    *where* (which mesh axes the epitome's m/n dims map to)."""
     name: str
     spec: Optional[EpitomeSpec]
     weight_bits: Optional[int] = None     # None -> fp weights
     mode: str = "kernel"
     snap_err: float = 0.0                 # relative epitome-area change at
                                           # legalization (0 = untouched)
+    placement: Optional[LayerPlacement] = None
 
 
 @dataclasses.dataclass
@@ -216,8 +225,12 @@ class EpitomePlan:
             q = None if lp.weight_bits is None else QuantConfig(
                 bits=lp.weight_bits)
             out.append((lp.name,
-                        EpLayerConfig(spec=lp.spec, mode=lp.mode, quant=q)))
+                        EpLayerConfig(spec=lp.spec, mode=lp.mode, quant=q,
+                                      placement=lp.placement)))
         return tuple(out)
+
+    def placements(self) -> List[Optional[LayerPlacement]]:
+        return [lp.placement for lp in self.layers]
 
     # -- (de)serialization --------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -229,7 +242,9 @@ class EpitomePlan:
             "layers": [
                 {"name": lp.name, "spec": _spec_to_dict(lp.spec),
                  "weight_bits": lp.weight_bits, "mode": lp.mode,
-                 "snap_err": float(lp.snap_err)}
+                 "snap_err": float(lp.snap_err),
+                 "placement": (None if lp.placement is None
+                               else lp.placement.to_dict())}
                 for lp in self.layers
             ],
         }
@@ -241,7 +256,9 @@ class EpitomePlan:
             arch=d["arch"],
             layers=[LayerPlan(r["name"], _spec_from_dict(r["spec"]),
                               r["weight_bits"], r["mode"],
-                              float(r["snap_err"]))
+                              float(r["snap_err"]),
+                              (None if r["placement"] is None
+                               else LayerPlacement.from_dict(r["placement"])))
                     for r in d["layers"]],
             provenance=d["provenance"],
             predicted=d["predicted"],
@@ -301,8 +318,9 @@ class PlanSchemaError(ValueError):
 
 
 _PLAN_KEYS = {"version", "arch", "provenance", "predicted", "layers"}
-_LAYER_KEYS = {"name", "spec", "weight_bits", "mode", "snap_err"}
+_LAYER_KEYS = {"name", "spec", "weight_bits", "mode", "snap_err", "placement"}
 _SPEC_KEYS = {"M", "N", "m", "n", "bm", "bn"}
+_PLACEMENT_KEYS = {"row_axis", "col_axis", "scales"}
 _PREDICTED_KEYS = {"latency_s", "energy_j", "edp", "xbars", "utilization"}
 
 
@@ -350,9 +368,31 @@ def validate_plan_dict(d: Any) -> None:
         se = r["snap_err"]
         if not isinstance(se, (int, float)) or isinstance(se, bool) or se < 0:
             fail(f"{p}.snap_err", f"expected number >= 0, got {se!r}")
+        pl = r["placement"]
+        if pl is not None:
+            expect_keys(pl, _PLACEMENT_KEYS, f"{p}.placement")
+            for ax in ("row_axis", "col_axis"):
+                v = pl[ax]
+                if v is not None and v not in MESH_AXES:
+                    fail(f"{p}.placement.{ax}",
+                         f"expected null or one of {MESH_AXES}, got {v!r}")
+            if pl["row_axis"] is not None \
+                    and pl["row_axis"] == pl["col_axis"]:
+                fail(f"{p}.placement",
+                     f"row_axis and col_axis are both {pl['row_axis']!r}; "
+                     "a mesh axis can shard only one dim")
+            if pl["scales"] not in SCALE_MODES:
+                fail(f"{p}.placement.scales",
+                     f"expected one of {SCALE_MODES}, got {pl['scales']!r}")
         s = r["spec"]
         if s is None:
             continue
+        # an epitomized kernel-mode layer with no placement record cannot be
+        # laid out by the mesh/prepack consumers — fail at the schema, not
+        # deep inside serving
+        if r["mode"] == "kernel" and pl is None:
+            fail(f"{p}.placement",
+                 "kernel-mode epitomized layers require a placement record")
         expect_keys(s, _SPEC_KEYS, f"{p}.spec")
         for k, v in s.items():
             if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
@@ -414,23 +454,77 @@ def legalize_spec(layer: LayerShape, spec: Optional[EpitomeSpec],
     return best, best_err
 
 
+def pack_grid(spec: EpitomeSpec, tile: int = 256) -> Tuple[int, int]:
+    """(m/bk, n/bn) shape of a packed epitome's Es/Ez scale grids.
+
+    A jax-free mirror of ``kernels.ops.pack_blocks`` (``tile`` is the
+    quantizer's crossbar tile, QuantConfig.tile — the plan pipeline always
+    builds QuantConfigs at the 256 default) — the planner must know the
+    grid shape to snap ``scales='shard'`` placements without importing the
+    kernel stack; a cross-check test guards against drift."""
+    bk = next((b for b in (256, 128, 64, 32, 16, 8)
+               if b <= tile and spec.m % b == 0), spec.m)
+    return -(-spec.m // bk), -(-spec.n // spec.bn)
+
+
+def legalize_placements(plan: EpitomePlan,
+                        mesh_shape: Dict[str, int]
+                        ) -> Tuple[EpitomePlan, Dict[str, List[str]]]:
+    """Placement half of the legalization pass: snap every layer's
+    annotation to the divisibility constraints of its (legalized) spec on a
+    concrete mesh — m/n must tile evenly over the assigned axis — dropping
+    offending axes to replicated.  Returns the snapped plan plus the
+    per-layer fallback report (also stamped into provenance so the
+    artifact records what degraded and why)."""
+    layers = inventory_for(plan.arch)()
+    out: List[LayerPlan] = []
+    report: Dict[str, List[str]] = {}
+    for l, lp in zip(layers, plan.layers):
+        rows, cols = ((lp.spec.m, lp.spec.n) if lp.spec is not None
+                      else (l.rows, l.cols))
+        grid = (pack_grid(lp.spec)
+                if lp.spec is not None and lp.weight_bits is not None
+                else None)
+        snapped, fallbacks = snap_placement(lp.placement, rows, cols,
+                                            dict(mesh_shape),
+                                            scale_grid=grid)
+        if fallbacks:
+            report[lp.name] = fallbacks
+        out.append(dataclasses.replace(lp, placement=snapped))
+    snapped_plan = dataclasses.replace(
+        plan, layers=out,
+        provenance={**plan.provenance,
+                    "mesh_shape": {k: int(v) for k, v in mesh_shape.items()},
+                    "placement_fallbacks": report})
+    return snapped_plan, report
+
+
 def legalize_plan(plan: EpitomePlan, *,
                   patch: Optional[Tuple[int, int]] = None,
                   simulator: Optional[PimSimulator] = None,
-                  wrapping: bool = True) -> EpitomePlan:
+                  wrapping: bool = True,
+                  mesh_shape: Optional[Dict[str, int]] = None) -> EpitomePlan:
     """The legalization pass: every spec snaps to a kernel-exact family,
     per-layer snap errors are recorded, and the cost is re-simulated so the
-    plan's prediction describes the design that will actually run."""
+    plan's prediction describes the design that will actually run.  Layers
+    missing a placement gain the role-based default; with ``mesh_shape``
+    (axis name -> size) the placements are additionally snapped to the
+    divisibility constraints of the legalized specs (reported fallbacks in
+    provenance)."""
     layers = inventory_for(plan.arch)()
     patch = tuple(patch or exec_patch_for(plan.arch))
     out: List[LayerPlan] = []
     for l, lp in zip(layers, plan.layers):
         legal, err = legalize_spec(l, lp.spec, patch)
-        out.append(dataclasses.replace(lp, spec=legal, snap_err=err))
+        placement = lp.placement or default_placement(l.name)
+        out.append(dataclasses.replace(lp, spec=legal, snap_err=err,
+                                       placement=placement))
     legal_plan = EpitomePlan(
         arch=plan.arch, layers=out,
         provenance={**plan.provenance, "legalized": True,
                     "patch": list(patch)})
+    if mesh_shape is not None:
+        legal_plan, _ = legalize_placements(legal_plan, mesh_shape)
     sim = simulator or simulator_for(plan.arch)
     legal_plan.predicted = sim.simulate_plan(
         legal_plan, wrapping=wrapping,
@@ -471,16 +565,23 @@ def plan_from_specs(arch: str, specs: Sequence[Optional[EpitomeSpec]], *,
                     planner: str = "manual",
                     simulator: Optional[PimSimulator] = None,
                     act_bits: Optional[int] = None, wrapping: bool = True,
-                    provenance: Optional[Dict[str, Any]] = None
-                    ) -> EpitomePlan:
-    """Wrap a bare spec list into a plan: provenance + simulated cost."""
+                    provenance: Optional[Dict[str, Any]] = None,
+                    placements: Optional[Sequence[Optional[LayerPlacement]]]
+                    = None) -> EpitomePlan:
+    """Wrap a bare spec list into a plan: provenance + simulated cost.
+    Placement defaults to the role-based serving layout per layer."""
     layers = inventory_for(arch)()
     if len(specs) != len(layers):
         raise ValueError(f"{len(specs)} specs for {len(layers)} layers")
+    if placements is None:
+        placements = [default_placement(l.name) for l in layers]
+    elif len(placements) != len(layers):
+        raise ValueError(f"{len(placements)} placements for "
+                         f"{len(layers)} layers")
     plan = EpitomePlan(
         arch=arch,
-        layers=[LayerPlan(l.name, s, weight_bits, mode)
-                for l, s in zip(layers, specs)],
+        layers=[LayerPlan(l.name, s, weight_bits, mode, placement=pl)
+                for l, s, pl in zip(layers, specs, placements)],
         provenance={"planner": planner, "act_bits": act_bits,
                     "legalized": False, **(provenance or {})})
     sim = simulator or simulator_for(arch)
@@ -560,7 +661,8 @@ def search_plan(arch: str, *, objective: str = "latency",
         seeds=[seed_specs], act_bits=act_bits)
     return EpitomePlan(
         arch=arch,
-        layers=[LayerPlan(l.name, s, weight_bits, mode)
+        layers=[LayerPlan(l.name, s, weight_bits, mode,
+                          placement=default_placement(l.name))
                 for l, s in zip(layers, best)],
         provenance={"planner": "evolution_search", "objective": cfg.objective,
                     "seed": cfg.seed, "population": cfg.population,

@@ -15,6 +15,55 @@ from __future__ import annotations
 import dataclasses
 
 
+@dataclasses.dataclass(frozen=True)
+class TinyCalibration:
+    """Latency coefficients for the tiny (8, 8)-crossbar simulator, fitted
+    to *measured* interpret-mode wall times so the tiny predicted-vs-
+    measured benchmark rows are comparable, not just directional.
+
+    The Table-1 calibration above targets crossbar-scale geometry (ResNet-50
+    on 128x256 arrays); the tiny CPU-test network runs a scaled-down (8, 8)
+    execution patch whose event counts are ~3 orders of magnitude smaller,
+    so the paper-calibrated A/B coefficients under-predict what this host
+    actually measures by the same orders.  These two coefficients re-solve
+    the 2x2 latency system of ``simulator.calibrate`` on two *measured*
+    anchors instead of paper numbers:
+
+      latency = A * R + B * V   with   A, B >= 0
+
+    anchored on (dense tiny-resnet, auto-planned kernel x q3 tiny-resnet)
+    jitted forwards at batch=2, hw=16 (the geometry benchmarks and
+    ``launch/plan.py run`` use).  Energy coefficients are NOT touched —
+    wall time measures latency only; energy stays structural.
+
+    Provenance: regenerate with ``pim.simulator.calibrate_tiny_coefficients()``
+    (measures this host, returns a TinyCalibration).  The constants below
+    were measured 2026-07-31 on the repo CI container (Linux x86-64 CPU,
+    jax 0.4.x interpret-mode Pallas): dense wall 0.521 ms, epitomized
+    kernel x q3 wall 2.524 ms at batch=2 hw=16.  The exact 2x2 solve is
+    infeasible here (interpret mode pays per-dispatch Python overhead that
+    *inverts* the PIM model's direction: W3A9 epitomes are predicted
+    faster than dense fp but measure slower on CPU), so the non-negative
+    projection keeps the round-event term only (B = 0).  The previous
+    uncalibrated defaults (A = 1e-9, B = 1e-12) under-predicted the
+    measured tiny rows by ~3.5 orders of magnitude; this fit brings
+    predicted and measured onto the same scale (within ~one order), which
+    is what "comparable" can mean for a Python-interpreter measurement of
+    a PIM event model.
+    """
+    A: float = 5.3825e-07        # s per round event (measured lstsq fit)
+    B: float = 0.0               # s per buffer element (non-neg projection)
+    measured_dense_s: float = 5.206e-4
+    measured_epitome_s: float = 2.5236e-3
+    batch: int = 2
+    hw: int = 16
+    method: str = ("calibrate_tiny_coefficients @ 2026-07-31, "
+                   "repo CI container (CPU interpret mode)")
+
+
+TINY_CALIBRATION = TinyCalibration()
+
+
 @dataclasses.dataclass
 class HardwareLUT:
     # --- per crossbar activation round (word-line pulse + sense) -----------

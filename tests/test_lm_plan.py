@@ -210,6 +210,67 @@ class TestLMPlanConfig:
 
 
 # ---------------------------------------------------------------------------
+# Placement threading: plan -> layer_config -> param_specs
+# ---------------------------------------------------------------------------
+class TestPlacementThreading:
+    def test_placement_lands_in_layer_config(self):
+        """Plan placements survive into the hashable ModelConfig, and the
+        JSON round-trip builds an identical config — placement included."""
+        plan = auto_plan(SMOKE, target_cr=2.0, weight_bits=3, mode="kernel")
+        assert all(lp.placement is not None for lp in plan.layers)
+        cfg = get_smoke_config(ARCH, plan=plan)
+        for (name, lc), lp in zip(cfg.layer_config, plan.layers):
+            assert lc.placement == lp.placement, name
+        rt = EpitomePlan.from_json(plan.to_json())
+        cfg_rt = get_smoke_config(ARCH, plan=rt)
+        assert cfg == cfg_rt and hash(cfg) == hash(cfg_rt)
+
+    def test_param_specs_driven_by_plan_placement(self):
+        """An explicit placement annotation overrides the hard-coded path
+        rules in param_specs — including for the prepacked Eq/Es leaves
+        when scales='shard'."""
+        from jax.sharding import PartitionSpec as P
+        from repro.core.placement import LayerPlacement
+        plan = auto_plan(SMOKE, target_cr=2.0, weight_bits=3, mode="kernel")
+        name0 = plan.layers[0].name
+        plan = dataclasses.replace(plan, layers=[dataclasses.replace(
+            plan.layers[0],
+            placement=LayerPlacement(row_axis="data", col_axis="model",
+                                     scales="shard"))] + list(plan.layers[1:]))
+        cfg = get_smoke_config(ARCH, plan=plan)
+        params = lm.init_params(KEY, cfg)
+        packed = lm.prepack_params(params, cfg)
+        specs = lm.param_specs(cfg, jax.eval_shape(lambda: packed))
+        leaf = _tree_get(specs["groups"], name0)
+        assert leaf["E"] == P(None, "data", "model")
+        assert leaf["Eq"] == P(None, "data", "model")
+        assert leaf["Es"] == P(None, "data", "model")      # scales='shard'
+        # a default-placement layer: column-parallel, scales replicated
+        name1 = plan.layers[1].name
+        leaf1 = _tree_get(specs["groups"], name1)
+        col = plan.layers[1].placement.col_axis
+        assert leaf1["E"] == P(None, None, col)
+        assert leaf1["Es"] == P(None, None, None)
+
+    def test_serving_fallback_specs_are_column_parallel(self):
+        """Without a plan, serving=True uses the role-based bit-exact
+        defaults: output dims shard, contraction dims never do."""
+        from jax.sharding import PartitionSpec as P
+        cfg = get_smoke_config(ARCH, "kernel-q3")
+        params_shape = jax.eval_shape(lambda: lm.init_params(KEY, cfg))
+        specs = lm.param_specs(cfg, params_shape, serving=True)
+        wq = _tree_get(specs["groups"], "L0/mixer/wr")
+        assert wq["E"] == P(None, None, "model")
+        wv = _tree_get(specs["groups"], "L0/ffn/wv")       # (ff, d) fan-in
+        assert wv["E"] == P(None, None, "data")
+        assert specs["embed"] == P("model", None)
+        # the training default is untouched: FSDP rows over 'data'
+        train = lm.param_specs(cfg, params_shape)
+        assert _tree_get(train["groups"], "L0/mixer/wr")["E"] == \
+            P(None, "data", "model")
+
+
+# ---------------------------------------------------------------------------
 # Module-level fused path: no retrace across repeated applies
 # ---------------------------------------------------------------------------
 class TestNoRetrace:

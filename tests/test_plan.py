@@ -13,11 +13,14 @@ import numpy as np
 import pytest
 
 from repro.core.epitome import EpitomeSpec
+from repro.core.placement import (
+    LayerPlacement, default_placement, placement_role, snap_placement,
+)
 from repro.pim.evo import EvoConfig, candidate_specs, encode_individual
 from repro.pim.plan import (
     EXEC_PATCH, EpitomePlan, LayerPlan, PlanSchemaError, auto_plan,
-    inventory_for, is_kernel_exact, legalize_plan, legalize_spec,
-    plan_conv_specs, search_plan, simulator_for, uniform_plan,
+    inventory_for, is_kernel_exact, legalize_plan, legalize_placements,
+    legalize_spec, plan_conv_specs, search_plan, simulator_for, uniform_plan,
     validate_plan_dict,
 )
 from repro.pim.workloads import LayerShape, tiny_resnet_layers
@@ -148,6 +151,9 @@ class TestPlanRoundTrip:
     def test_schema_rejects_drift(self):
         d = legalize_plan(_tiny_search(seed=4)).to_dict()
         validate_plan_dict(d)                           # sanity: valid
+        # an epitomized kernel-mode layer, for the placement-required check
+        ep_i = next(i for i, r in enumerate(d["layers"])
+                    if r["spec"] is not None and r["mode"] == "kernel")
         for mutate in (
             lambda d: d.update(version=99),
             lambda d: d.update(arch="resnet9000"),
@@ -158,6 +164,16 @@ class TestPlanRoundTrip:
             lambda d: d["layers"][0].pop("snap_err"),
             lambda d: d["layers"][2]["spec"].update(m=10**9),
             lambda d: d["layers"][2]["spec"].pop("bn"),
+            # placement drift: unknown axis name, bad scales mode, missing
+            # record key, and a kernel-mode epitome with no placement at all
+            lambda d: d["layers"][0]["placement"].update(row_axis="weird"),
+            lambda d: d["layers"][0]["placement"].update(col_axis="xbar0"),
+            lambda d: d["layers"][0]["placement"].update(row_axis="model",
+                                                         col_axis="model"),
+            lambda d: d["layers"][0]["placement"].update(scales="maybe"),
+            lambda d: d["layers"][0]["placement"].pop("scales"),
+            lambda d: d["layers"][0].pop("placement"),
+            lambda d: d["layers"][ep_i].update(placement=None),
         ):
             bad = json.loads(json.dumps(d))
             mutate(bad)
@@ -175,6 +191,126 @@ class TestPlanRoundTrip:
         plan.layers[0] = dataclasses.replace(plan.layers[0], mode="folded")
         with pytest.raises(ValueError, match="mixes execution modes"):
             plan.uniform_mode()
+
+
+class TestPlacement:
+    """Per-layer placement records: role defaults, legalization snapping,
+    and round-trip."""
+
+    def test_roles_from_inventory_names(self):
+        assert placement_role("L0/mixer/wq") == "fan_out"
+        assert placement_role("L0/mixer/wo") == "fan_in"
+        assert placement_role("L0/ffn/w_down") == "fan_in"
+        # rwkv channel-mix: wk under /ffn/ is (d, ff) fan-out, wv (ff, d)
+        # fan-in — the transposition _leaf_spec hard-coded by path
+        assert placement_role("L0/ffn/wk") == "fan_out"
+        assert placement_role("L0/ffn/wv") == "fan_in"
+        assert placement_role("layer1.0.conv2") == "fan_out"
+
+    def test_defaults_are_bit_exact_column_parallel(self):
+        """Role defaults never shard the contraction (row) dim — that is
+        what keeps sharded serving bit-identical to single-device."""
+        for name in ("L0/mixer/wq", "L0/mixer/wo", "L0/ffn/w_down", "fc"):
+            pl = default_placement(name)
+            assert pl.row_axis is None
+            assert pl.col_axis in ("data", "model")
+            assert pl.scales == "replicate"
+        assert default_placement("L0/mixer/wq").col_axis == "model"
+        assert default_placement("L0/mixer/wo").col_axis == "data"
+
+    def test_planners_attach_placements(self):
+        for plan in (auto_plan("tiny-resnet", weight_bits=3),
+                     _tiny_search(seed=5),
+                     uniform_plan("resnet50", weight_bits=3)):
+            assert all(lp.placement is not None for lp in plan.layers)
+
+    def test_unknown_axis_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="unknown mesh axis"):
+            LayerPlacement(row_axis="chip7")
+        with pytest.raises(ValueError, match="scales"):
+            LayerPlacement(scales="sometimes")
+        # one mesh axis cannot shard both dims (NamedSharding would reject
+        # the duplicate much later, deep inside serving)
+        with pytest.raises(ValueError, match="only one dim"):
+            LayerPlacement(row_axis="model", col_axis="model")
+
+    def test_snap_placement_divisibility(self):
+        pl = LayerPlacement(row_axis="data", col_axis="model")
+        # 96 rows / 24 cols on a (data=3, model=5) mesh: rows tile, cols
+        # do not -> col_axis falls back with a reported reason
+        snapped, fb = snap_placement(pl, 96, 24, {"data": 3, "model": 5})
+        assert snapped.row_axis == "data" and snapped.col_axis is None
+        assert len(fb) == 1 and "24 % 5" in fb[0]
+        # axis absent from the mesh entirely
+        snapped, fb = snap_placement(pl, 96, 24, {"model": 4})
+        assert snapped.row_axis is None and snapped.col_axis == "model"
+        assert any("absent" in r for r in fb)
+
+    def test_snap_scales_shard_checks_grid_divisibility(self):
+        """scales='shard' must verify the Es/Ez tile grids divide too —
+        otherwise the artifact records 'shard' while serving silently
+        replicates the grids (constrained_sharding would degrade them)."""
+        from repro.pim.plan import pack_grid
+        spec = EpitomeSpec(M=64, N=96, m=32, n=96, bm=32, bn=32)
+        grid = pack_grid(spec)                 # (1, 3): 32/32 rows, 96/32
+        assert grid == (1, 3)
+        pl = LayerPlacement(row_axis=None, col_axis="model", scales="shard")
+        # n=96 divides model=4 but the 3-wide scale grid does not
+        snapped, fb = snap_placement(pl, 32, 96, {"model": 4},
+                                     scale_grid=grid)
+        assert snapped.col_axis == "model"
+        assert snapped.scales == "replicate"
+        assert any("scale tiles replicated" in r for r in fb)
+        # on model=3 both divide: shard survives
+        snapped, fb = snap_placement(pl, 32, 96, {"model": 3},
+                                     scale_grid=grid)
+        assert snapped.scales == "shard" and not fb
+
+    def test_pack_grid_matches_kernel_pack_blocks(self):
+        """pack_grid is a jax-free mirror of kernels.ops.pack_blocks for
+        the plan pipeline's QuantConfigs — guard against drift."""
+        from repro.core.quant import QuantConfig
+        from repro.kernels.ops import pack_blocks
+        from repro.pim.plan import pack_grid
+        for spec in (EpitomeSpec(M=64, N=96, m=32, n=96, bm=32, bn=32),
+                     EpitomeSpec(M=144, N=64, m=96, n=8, bm=8, bn=8),
+                     EpitomeSpec(M=2048, N=1024, m=1024, n=256,
+                                 bm=128, bn=256)):
+            for tile in (256, 32):          # default + smoke-patch tile
+                bk, bn = pack_blocks(spec, QuantConfig(bits=3, tile=tile))
+                assert pack_grid(spec, tile) == \
+                    (-(-spec.m // bk), -(-spec.n // bn)), (spec, tile)
+
+    def test_legalize_placements_reports_fallbacks(self):
+        plan = legalize_plan(_tiny_search(seed=5))
+        # force a placement that cannot divide: tiny epitome n dims are
+        # not multiples of 7
+        plan.layers[0] = dataclasses.replace(
+            plan.layers[0],
+            placement=LayerPlacement(row_axis=None, col_axis="model"))
+        snapped, report = legalize_placements(plan, {"data": 1, "model": 7})
+        name = plan.layers[0].name
+        if plan.layers[0].spec.n % 7 != 0:
+            assert name in report
+            assert snapped.layers[0].placement.col_axis is None
+        assert snapped.provenance["mesh_shape"] == {"data": 1, "model": 7}
+        assert "placement_fallbacks" in snapped.provenance
+
+    def test_legalize_plan_fills_missing_placements(self):
+        plan = _tiny_search(seed=5)
+        plan.layers[0] = dataclasses.replace(plan.layers[0], placement=None)
+        legal = legalize_plan(plan)
+        assert all(lp.placement is not None for lp in legal.layers)
+
+    def test_placement_round_trips(self):
+        plan = legalize_plan(_tiny_search(seed=5))
+        plan.layers[1] = dataclasses.replace(
+            plan.layers[1],
+            placement=LayerPlacement(row_axis="data", col_axis="model",
+                                     scales="shard"))
+        rt = EpitomePlan.from_json(plan.to_json())
+        assert rt.placements() == plan.placements()
+        assert rt.layers[1].placement.scales == "shard"
 
 
 class TestLegalizedExecutionParity:
