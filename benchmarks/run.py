@@ -9,6 +9,7 @@ Sections:
   table3   — Table 3 epitome + pruning compression
   fig4     — Figure 4 uniform vs wrapping vs evo-search vs EPIM-Opt
   kernels  — epitome matmul mode timings + Pallas interpret checks
+  serving  — continuous-batching engine under open-loop Poisson load
   roofline — per (arch x shape) roofline table from the dry-run artifacts
 """
 from __future__ import annotations
@@ -62,7 +63,7 @@ def main() -> None:
                     help="also write the emitted rows to this CSV file "
                          "(CI uploads it as an artifact)")
     args = ap.parse_args()
-    from benchmarks import paper_tables, kernels_bench
+    from benchmarks import paper_tables, kernels_bench, serving_bench
     sections = {
         "table1": paper_tables.table1,
         "table2": paper_tables.table2,
@@ -78,6 +79,8 @@ def main() -> None:
         # sharded serving smoke: meaningful when the process has > 1
         # device (CI forces 8 CPU host devices via XLA_FLAGS)
         "sharded": kernels_bench.sharded_plan,
+        # continuous-batching engine under Poisson load (TTFT / tok/s)
+        "serving": serving_bench.serving_smoke,
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

@@ -1,0 +1,148 @@
+"""Open-loop serving benchmark for the continuous-batching engine.
+
+Drives ``launch.engine.EpimEngine`` with Poisson arrivals (open loop: the
+arrival process never waits for the server, so queueing shows up in TTFT
+exactly as it would under real load) and reports:
+
+  p50/p99 TTFT       submit -> first token, milliseconds
+  mean per-token     decode latency per generated token, milliseconds
+  tok/s              total generated tokens / wall time
+  bit_identical      one request replayed through the one-shot
+                     ``serve.generate`` path with the same seed/max_len
+                     must reproduce the engine's tokens exactly
+
+Standalone:
+  PYTHONPATH=src python benchmarks/serving_bench.py --requests 6 --rate 50
+
+or as the ``serving`` section of benchmarks.run (CI gates the emitted
+``kernels/serving-smoke`` CSV row).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
+                n_requests: int = 6, rate_hz: float = 50.0,
+                prompt_lens=(4, 6, 9, 12), max_new: int = 8,
+                capacity: int = 4, temperature: float = 0.0, seed: int = 0,
+                max_len: int = 48, mesh=None,
+                check_bit_identity: bool = True) -> dict:
+    """Run one open-loop experiment; returns the metrics dict."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import serve
+    from repro.launch.engine import EngineConfig, Request
+
+    eng = EngineConfig(arch=arch, epitome=epitome, smoke=True, mesh=mesh,
+                       capacity=capacity, max_len=max_len, seed=seed).build()
+    rng = np.random.default_rng(seed)
+    reqs = [Request(prompt=tuple(int(t) for t in
+                                 rng.integers(0, eng.cfg.vocab,
+                                              size=int(rng.choice(prompt_lens)))),
+                    max_new_tokens=max_new, temperature=temperature,
+                    seed=seed + i)
+            for i in range(n_requests)]
+
+    # warm outside the timed window: one request per prefill bucket the
+    # workload will hit, plus the pooled decode program — so the timed
+    # TTFTs measure serving, not XLA compiles
+    for b in sorted({eng._bucket(len(r.prompt)) for r in reqs}):
+        eng.submit(Request(prompt=(1,) * min(b, max_len - 2),
+                           max_new_tokens=2, temperature=temperature))
+    eng.drain()
+    base = eng.stats
+
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+    handles = []
+    i = 0
+    t0 = time.perf_counter()
+    while i < n_requests or eng.n_active or eng.n_pending:
+        now = time.perf_counter() - t0
+        if i < n_requests and now >= arrivals[i]:
+            handles.append(eng.submit(reqs[i]))
+            i += 1
+            continue
+        if eng.step() == 0 and i < n_requests:
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+
+    comps = [h.result() for h in handles]
+    ttfts_ms = np.array([c.ttft_s for c in comps]) * 1e3
+    tok_ms = np.array([(c.latency_s - c.ttft_s)
+                       / max(1, len(c.tokens) - 1) for c in comps]) * 1e3
+    total = sum(len(c.tokens) for c in comps)
+
+    bit_identical = None
+    if check_bit_identity:
+        r, c = reqs[0], comps[0]
+        ref, _ = serve.generate(
+            eng.serve_params, eng.cfg,
+            jnp.asarray(np.asarray(r.prompt, np.int32)[None]), max_len,
+            r.max_new_tokens, temperature=r.temperature,
+            key=jax.random.PRNGKey(r.seed))
+        bit_identical = tuple(int(t) for t in np.asarray(ref)[0]) == c.tokens
+
+    stats = eng.stats
+    return {
+        "arch": arch, "epitome": epitome, "completed": len(comps),
+        "p50_ttft_ms": float(np.percentile(ttfts_ms, 50)),
+        "p99_ttft_ms": float(np.percentile(ttfts_ms, 99)),
+        "mean_tok_ms": float(tok_ms.mean()),
+        "tok_s": total / wall, "wall_s": wall,
+        "bit_identical": bit_identical,
+        "prefill_traces": stats["prefill_traces"],
+        "decode_steps": stats["decode_steps"] - base["decode_steps"],
+        "slot_reuses": stats["slot_reuses"] - base["slot_reuses"],
+    }
+
+
+def serving_smoke(emit) -> None:
+    """benchmarks.run section: CPU-scale smoke row CI gates on."""
+    m = run_serving()
+    emit("kernels/serving-smoke", m["mean_tok_ms"] * 1e3,
+         f"completed={m['completed']};"
+         f"p50_ttft_ms={m['p50_ttft_ms']:.1f};"
+         f"p99_ttft_ms={m['p99_ttft_ms']:.1f};"
+         f"tok_s={m['tok_s']:.1f};"
+         f"bit_identical={m['bit_identical']};"
+         f"prefill_traces={m['prefill_traces']};"
+         f"slot_reuses={m['slot_reuses']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="rwkv6-7b")
+    ap.add_argument("--epitome", default="kernel-q3")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    m = run_serving(arch=args.arch, epitome=args.epitome,
+                    n_requests=args.requests, rate_hz=args.rate,
+                    max_new=args.max_new_tokens, capacity=args.capacity,
+                    temperature=args.temperature, seed=args.seed)
+    print(f"[serving] {m['arch']} epitome={m['epitome']}: "
+          f"completed={m['completed']} in {m['wall_s']:.2f}s "
+          f"({m['tok_s']:.1f} tok/s)")
+    print(f"[serving] ttft p50={m['p50_ttft_ms']:.1f}ms "
+          f"p99={m['p99_ttft_ms']:.1f}ms; "
+          f"per-token {m['mean_tok_ms']:.2f}ms; "
+          f"prefill_traces={m['prefill_traces']} "
+          f"slot_reuses={m['slot_reuses']}")
+    print(f"[serving] bit_identical={m['bit_identical']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,420 @@
+"""Continuous-batching serving engine with a unified request-level API.
+
+Everything the launch layer serves — the one-shot ``serve`` CLI, the plan
+runner, the serving benchmark, and the tests — builds its model/mesh/param
+stack through one entry point, ``EngineConfig.build()``, and talks to the
+model at request granularity through ``EpimEngine``.
+
+API reference
+-------------
+``Request``
+    Frozen per-request spec: ``prompt`` (token ids), ``max_new_tokens``,
+    ``temperature`` (0 = greedy), ``seed``.  The seed is the *request's*
+    sampling identity: the engine folds ``jax.random.PRNGKey(seed)`` into
+    the slot the request lands in, so the sampled continuation depends
+    only on the request — never on arrival order or batch position.
+
+``Completion``
+    Frozen result: ``request_id``, ``prompt_len``, ``tokens`` (the
+    generated ids, prompt excluded), ``ttft_s`` (submit -> first token),
+    ``latency_s`` (submit -> last token).
+
+``RequestHandle``
+    Returned by ``submit``; ``done()`` / ``result()`` poll the completion.
+
+``EngineConfig``
+    Dataclass of everything needed to stand a server up: ``arch``,
+    ``epitome``, ``plan`` (path or EpitomePlan), ``mesh`` ('' = data
+    parallel over all devices, 'DATA,MODEL' = explicit sharded mesh,
+    ``None`` = leave the global mesh untouched), ``smoke``, ``prepack``,
+    ``capacity`` (decode slots), ``max_len`` (per-slot KV/cache budget),
+    ``seed`` (param init).  ``build()`` performs the whole setup that
+    serve.py/plan.py used to duplicate — config resolution, param init,
+    weight-stationary int8 prepack, mesh layout — and returns a ready
+    ``EpimEngine`` (with ``.cfg/.params/.packed/.serve_params/.mesh/
+    .prompt_key/.sample_key`` exposed for one-shot callers).
+
+``EpimEngine``
+    ``submit(request) -> RequestHandle`` admits the request when a slot
+    is free (prefill runs immediately — prefill/decode disaggregation:
+    the prompt is its own dispatch, never batched into the decode step);
+    ``step()`` runs ONE batched decode step over every active slot and
+    returns how many tokens were emitted; ``drain()`` steps until idle
+    and returns every completion in submission order.  ``stats`` counts
+    ``prefill_traces`` / ``slot_reuses`` / ``decode_steps`` /
+    ``completed`` / ``admitted``.
+
+Scheduling model
+----------------
+The engine owns ONE pooled decode-state tree (``lm.init_state_pool``)
+whose batch axis is ``capacity`` request slots — dense recurrent state
+per slot for the SSM/RWKV blocks, a block of ``max_len`` KV rows per
+slot for attention.  A free-list hands slots out; a finished request
+frees its slot mid-flight and the next pending request scatters a fresh
+prefill state over it (``lm.scatter_slot_state``).  Decode runs at the
+full pool width with per-slot positions (``pos (C,)``) — freed/idle
+slots compute garbage in their own rows, which per-row independence
+keeps away from live requests and the next admission overwrites.
+
+Prompt bucketing
+----------------
+Prefill pads prompts up to power-of-two buckets (min 8, capped at
+``max_len``) so distinct prompt lengths reuse one compiled program per
+bucket — retraces are bounded by the number of buckets, not the number
+of lengths.  Pads sit strictly AFTER the real tokens and every mixer
+masks them to exact zeros / exact identities (``valid_len`` threading in
+models/*), so the bucketed prefill is bit-identical to an unpadded
+prefill of the same prompt.  MoE architectures are the one exception:
+capacity-based expert routing couples every token in the batch — pad
+tokens would consume expert-queue ranks — so MoE prompts prefill at
+exact length (one trace per distinct length, documented trade-off).
+
+Bit-exactness contract
+----------------------
+For any single request the engine's output is bit-identical to the
+pre-existing one-shot path (``serve.generate`` with the same ``max_len``
+and ``key=jax.random.PRNGKey(request.seed)``), greedy and sampled,
+single-device and sharded: right-padded masked prefill keeps real-token
+bits; decode rows are independent so batch width doesn't perturb a
+request; and ``jax.random.categorical`` over a ``(V,)`` row draws the
+same bits as over ``(1, V)`` (flat threefry counter reshape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..models import lm
+from ..models.common import set_mesh
+from .mesh import make_host_mesh, mesh_for_plan, parse_mesh
+
+# Python-side counter bumped inside the jitted prefill body: it only fires
+# when XLA (re)traces, so the delta since engine construction counts
+# compiled prefill programs — the bucketing test pins it.
+PREFILL_TRACES = [0]
+
+
+# ---------------------------------------------------------------------------
+# Request-level API
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.  ``prompt`` is coerced to a tuple of ints so
+    requests are hashable/immutable; ``temperature`` 0 means greedy."""
+    prompt: Tuple[int, ...]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt",
+                           tuple(int(t) for t in self.prompt))
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    request_id: int
+    prompt_len: int
+    tokens: Tuple[int, ...]        # generated ids only (prompt excluded)
+    ttft_s: float                  # submit -> first token
+    latency_s: float               # submit -> last token
+
+
+class _Record:
+    __slots__ = ("rid", "request", "tokens", "submit_t", "first_tok_t",
+                 "completion", "slot")
+
+    def __init__(self, rid: int, request: Request, submit_t: float):
+        self.rid, self.request, self.submit_t = rid, request, submit_t
+        self.tokens: List[int] = []
+        self.first_tok_t = 0.0
+        self.completion: Optional[Completion] = None
+        self.slot: Optional[int] = None
+
+
+class RequestHandle:
+    """Poll-able view of a submitted request."""
+
+    def __init__(self, record: _Record):
+        self._rec = record
+
+    @property
+    def request_id(self) -> int:
+        return self._rec.rid
+
+    def done(self) -> bool:
+        return self._rec.completion is not None
+
+    def result(self) -> Completion:
+        if self._rec.completion is None:
+            raise RuntimeError(f"request {self._rec.rid} not finished; "
+                               "step()/drain() the engine first")
+        return self._rec.completion
+
+
+# ---------------------------------------------------------------------------
+# Jitted kernels: per-row sampling, bucketed prefill, pooled decode
+# ---------------------------------------------------------------------------
+def sample_logits(logits: jax.Array) -> jax.Array:
+    """Prepare logits for sampling: float32, constrained replicated.
+
+    The gumbel draw inside ``jax.random.categorical`` must see a
+    replicated 32-bit consumer: under a mesh, GSPMD partitions a
+    sub-32-bit (e.g. bfloat16) random draw along the vocab sharding of
+    whatever consumes it, which CHANGES the bits relative to the eager /
+    single-device draw — the one-shot path's eager first token and the
+    engine's jitted prefill would sample different tokens from identical
+    logits.  Replicated float32 keeps every sampling site — eager or
+    jitted, one-shot or pooled decode — on the same random stream."""
+    from ..models.common import shard
+    return shard(logits.astype(jnp.float32), *([None] * logits.ndim))
+
+
+def _sample_row(logits32: jax.Array, key: jax.Array, temp: jax.Array):
+    """One row of serve._select on a ``sample_logits``-prepared row:
+    split-then-categorical when sampling, argmax (key untouched) when
+    greedy.  Only the temperature *value* is traced — both branches run
+    and a where picks, so sweeping temperature (or mixing greedy/sampled
+    slots in one batch) never retraces."""
+    nxt, sub = jax.random.split(key)
+    safe = jnp.where(temp > 0, temp, jnp.ones((), temp.dtype))
+    cat = jax.random.categorical(sub, logits32 / safe)
+    tok = jnp.where(temp > 0, cat, jnp.argmax(logits32, axis=-1))
+    return tok.astype(jnp.int32), jnp.where(temp > 0, nxt, key)
+
+
+_sample_rows = jax.vmap(_sample_row)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+def _prefill_one(params, prompt, valid_len, key, temp, *, cfg, max_len):
+    """Prefill ONE right-padded prompt into a fresh batch-1 state and
+    sample its first token.  Compiled once per (cfg, max_len, bucket
+    length) — the bucket policy bounds how many of these exist."""
+    PREFILL_TRACES[0] += 1
+    state = lm.init_decode_state(cfg, 1, max_len)
+    logits, state = lm.prefill(params, prompt, state, cfg, valid_len)
+    tok, key = _sample_row(sample_logits(logits[:, -1])[0], key, temp)
+    return tok, key, state
+
+
+@jax.jit
+def _scatter(pool, one, slot):
+    return lm.scatter_slot_state(pool, one, slot)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_batch(params, pool, tok, pos, keys, temps, *, cfg):
+    """One decode step over the whole slot pool: per-slot positions, then
+    one per-slot sampling fold.  Freed slots decode garbage in their own
+    rows only (per-row independence) — the host masks them out."""
+    logits, pool = lm.decode_step(params, pool, tok, pos, cfg)
+    toks, keys = _sample_rows(sample_logits(logits[:, -1]), keys, temps)
+    return toks, pool, keys
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: the one setup path
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EngineConfig:
+    """Source of truth for standing up a server (CLI flags mirror these
+    fields).  See the module docstring for field semantics."""
+    arch: str = "rwkv6-7b"
+    epitome: str = "off"
+    plan: Any = None                 # path str | EpitomePlan | None
+    mesh: Optional[str] = ""         # '' auto-DP | 'D,M' sharded | None as-is
+    smoke: bool = False
+    prepack: bool = True
+    capacity: int = 4
+    max_len: int = 128
+    seed: int = 0
+
+    def build(self) -> "EpimEngine":
+        plan = self.plan or None
+        if isinstance(plan, str):
+            from ..pim.plan import EpitomePlan
+            plan = EpitomePlan.load(plan)
+        cfg = (get_smoke_config(self.arch, self.epitome, plan=plan)
+               if self.smoke else
+               get_config(self.arch, self.epitome, plan=plan))
+        mesh = shard_mesh = None
+        if self.mesh is not None:
+            if self.mesh:
+                data, model = parse_mesh(self.mesh)
+                mesh = (mesh_for_plan(plan, data=data, model=model)
+                        if plan is not None
+                        else make_host_mesh(data=data, model=model))
+                shard_mesh = mesh   # explicit mesh => lay params out on it
+            else:
+                mesh = make_host_mesh(data=len(jax.devices()))
+            set_mesh(mesh)
+        # independent streams for params / prompts / sampling (one shared
+        # key would correlate the prompt draw with the weight init)
+        init_key, prompt_key, sample_key = jax.random.split(
+            jax.random.PRNGKey(self.seed), 3)
+        params = lm.init_params(init_key, cfg)
+        packed = (lm.prepack_params(params, cfg, mesh=shard_mesh)
+                  if self.prepack and lm.needs_prepack(cfg) else None)
+        if shard_mesh is not None:
+            params = lm.shard_params(params, cfg, shard_mesh)
+        engine = EpimEngine(cfg, packed if packed is not None else params,
+                            capacity=self.capacity, max_len=self.max_len)
+        engine.config, engine.mesh = self, mesh
+        engine.params, engine.packed = params, packed
+        engine.prompt_key, engine.sample_key = prompt_key, sample_key
+        return engine
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+class EpimEngine:
+    """Slot-scheduled continuous-batching server over one decode pool."""
+
+    def __init__(self, cfg, serve_params, capacity: int = 4,
+                 max_len: int = 128):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.cfg, self.serve_params = cfg, serve_params
+        self.capacity, self.max_len = capacity, max_len
+        # MoE capacity routing couples every batch row (pad tokens would
+        # consume expert-queue ranks), so MoE prompts prefill exact-length
+        self.bucket_prompts = "moe" not in cfg.ffn_pattern
+        self._pool = lm.init_state_pool(cfg, capacity, max_len)
+        self._tok = np.zeros((capacity, 1), np.int32)
+        self._key = np.zeros((capacity, 2), np.uint32)
+        self._pos = np.zeros((capacity,), np.int32)
+        self._temp = np.zeros((capacity,), np.float32)
+        self._free = list(range(capacity))[::-1]      # pop() -> slot 0 first
+        self._used: set = set()
+        self._active: Dict[int, _Record] = {}
+        self._pending: deque = deque()
+        self._records: List[_Record] = []
+        self._next_id = itertools.count()
+        self._trace_base = PREFILL_TRACES[0]
+        self._stats = {"slot_reuses": 0, "decode_steps": 0,
+                       "completed": 0, "admitted": 0}
+        # set by EngineConfig.build (None for a bare-constructed engine)
+        self.config: Optional[EngineConfig] = None
+        self.mesh = None
+        self.params = self.packed = None
+        self.prompt_key = self.sample_key = None
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, request: Request) -> RequestHandle:
+        P = len(request.prompt)
+        if P < 1:
+            raise ValueError("empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if P + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({P}) + max_new_tokens ({request.max_new_tokens}) "
+                f"exceeds the engine's max_len ({self.max_len})")
+        rec = _Record(next(self._next_id), request, time.perf_counter())
+        self._records.append(rec)
+        self._pending.append(rec)
+        self._admit_all()
+        return RequestHandle(rec)
+
+    def step(self) -> int:
+        """One batched decode step over every active slot.  Returns the
+        number of tokens emitted (0 = nothing active)."""
+        self._admit_all()
+        if not self._active:
+            return 0
+        toks, self._pool, keys = _decode_batch(
+            self.serve_params, self._pool, jnp.asarray(self._tok),
+            jnp.asarray(self._pos), jnp.asarray(self._key),
+            jnp.asarray(self._temp), cfg=self.cfg)
+        toks = np.asarray(jax.device_get(toks))
+        self._key = np.array(jax.device_get(keys))
+        self._stats["decode_steps"] += 1
+        emitted = 0
+        for slot, rec in list(self._active.items()):
+            tok = int(toks[slot])
+            rec.tokens.append(tok)
+            self._tok[slot, 0] = tok
+            self._pos[slot] += 1
+            emitted += 1
+            if len(rec.tokens) >= rec.request.max_new_tokens:
+                self._finish(rec)
+        return emitted
+
+    def drain(self) -> List[Completion]:
+        """Step until no request is pending or active; return every
+        completion this engine has produced, in submission order."""
+        while self._pending or self._active:
+            self.step()
+        return [r.completion for r in self._records
+                if r.completion is not None]
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {**self._stats,
+                "prefill_traces": PREFILL_TRACES[0] - self._trace_base}
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    # -- scheduler internals ------------------------------------------------
+    def _bucket(self, P: int) -> int:
+        if not self.bucket_prompts:
+            return P
+        return min(max(8, 1 << (P - 1).bit_length()), self.max_len)
+
+    def _admit_all(self) -> None:
+        while self._pending and self._free:
+            self._admit(self._pending.popleft())
+
+    def _admit(self, rec: _Record) -> None:
+        slot = self._free.pop()
+        self._stats["slot_reuses"] += slot in self._used
+        self._used.add(slot)
+        req = rec.request
+        P = len(req.prompt)
+        L = self._bucket(P)
+        prompt = np.zeros((1, L), np.int32)
+        prompt[0, :P] = req.prompt
+        tok, key, state = _prefill_one(
+            self.serve_params, jnp.asarray(prompt), jnp.int32(P),
+            jax.random.PRNGKey(req.seed), jnp.float32(req.temperature),
+            cfg=self.cfg, max_len=self.max_len)
+        self._pool = _scatter(self._pool, state, jnp.int32(slot))
+        rec.tokens.append(int(jax.device_get(tok)))
+        rec.first_tok_t = time.perf_counter()
+        rec.slot = slot
+        self._tok[slot, 0] = rec.tokens[0]
+        self._key[slot] = np.asarray(jax.device_get(key))
+        self._pos[slot] = P
+        self._temp[slot] = req.temperature
+        self._stats["admitted"] += 1
+        if req.max_new_tokens == 1:
+            self._finish(rec)
+        else:
+            self._active[slot] = rec
+
+    def _finish(self, rec: _Record) -> None:
+        now = time.perf_counter()
+        rec.completion = Completion(
+            request_id=rec.rid, prompt_len=len(rec.request.prompt),
+            tokens=tuple(rec.tokens), ttft_s=rec.first_tok_t - rec.submit_t,
+            latency_s=now - rec.submit_t)
+        self._active.pop(rec.slot, None)
+        self._free.append(rec.slot)
+        self._stats["completed"] += 1

@@ -110,10 +110,10 @@ def _run_lm(plan, args) -> None:
     this holds)."""
     import jax
     import numpy as np
-    from ..configs import get_smoke_config
     from ..models import lm
     from ..models.common import set_mesh
     from ..pim.plan import LM_SMOKE_SUFFIX
+    from .engine import EngineConfig
     from .mesh import mesh_for_plan, parse_mesh
     from .serve import _prefill, _warm_tok_s, generate
 
@@ -123,14 +123,16 @@ def _run_lm(plan, args) -> None:
             f"instantiate here; run the matching '{plan.arch}{LM_SMOKE_SUFFIX}'"
             " plan, or serve the full model via repro.launch.serve --plan")
     arch = plan.arch[:-len(LM_SMOKE_SUFFIX)]
-    cfg = get_smoke_config(arch, plan=plan)
-    key = jax.random.PRNGKey(args.seed)
-    init_key, prompt_key, sample_key = jax.random.split(key, 3)
-    params = lm.init_params(init_key, cfg)
-    packed = lm.prepack_params(params, cfg) if lm.needs_prepack(cfg) else None
     B, P, gen = args.batch, 8, 8
-    prompts = jax.random.randint(prompt_key, (B, P), 0, cfg.vocab)
     max_len = P + gen + 1
+    # the shared setup path (config resolution, init, prepack); mesh=None
+    # leaves the global mesh alone — the sharded phase below lays the
+    # packed codes out itself AFTER capturing a single-device reference
+    engine = EngineConfig(arch=arch, plan=plan, mesh=None, smoke=True,
+                          capacity=B, max_len=max_len, seed=args.seed).build()
+    cfg, params, packed = engine.cfg, engine.params, engine.packed
+    prompt_key, sample_key = engine.prompt_key, engine.sample_key
+    prompts = jax.random.randint(prompt_key, (B, P), 0, cfg.vocab)
     print(f"[plan] {plan.arch}: {plan.n_epitomized}/{len(plan.layers)} "
           f"projections epitomized, prepacked={packed is not None}")
     if args.mesh:

@@ -2,7 +2,7 @@
 
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --requests 4 --prompt-len 32 --max-new-tokens 16
 
 Epitomized serving: a ``kernel`` x quant config (e.g. --epitome kernel-q3,
 or --plan <lm-plan.json> for a per-layer searched design) is prepacked
@@ -10,31 +10,40 @@ after init — the epitomes quantize to int8 codes ONCE, vmapped over the
 scan-over-groups param stack — so every decode step feeds the fused kernel
 pure prepacked codes instead of re-quantizing inside the jitted forward.
 The smoke output reports warm tok/s with and without the prepack.
+
+All model/mesh/param setup is ``launch.engine.EngineConfig.build()`` — the
+flags here are thin aliases over its fields plus the per-request knobs of
+``launch.engine.Request``.  ``--engine`` additionally routes the same
+prompts through the continuous-batching ``EpimEngine`` (one request per
+prompt) and, when greedy, checks the engine's tokens bit-identical to the
+one-shot batched path below.
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from ..configs import get_config, get_smoke_config
 from ..models import lm
-from ..models.common import set_mesh
-from .mesh import make_host_mesh, mesh_for_plan, parse_mesh
+from .engine import EngineConfig, Request, sample_logits
 
 
 def _select(logits, key, temperature, sampled: bool):
     # every position — including the first token after prefill — honors
     # the temperature; greedy only when temperature == 0.  Only the
     # greedy-vs-sampled branch is trace-static; the temperature value
-    # itself stays traced so sweeping it never recompiles.
+    # itself stays traced so sweeping it never recompiles.  The sampled
+    # branch draws its gumbel on replicated float32 logits
+    # (engine.sample_logits): the bits are then identical whether this
+    # runs eagerly (first token), inside the decode scan, or inside the
+    # engine's pooled decode, on any mesh.
     if sampled:
         key, sub = jax.random.split(key)
-        tok = jax.random.categorical(
-            sub, logits / temperature.astype(logits.dtype))
+        tok = jax.random.categorical(sub, sample_logits(logits) / temperature)
     else:
         tok = jnp.argmax(logits, axis=-1)
     return tok.astype(jnp.int32)[:, None], key
@@ -95,8 +104,22 @@ def _warm_tok_s(params, cfg, prompts, max_len, gen, temperature, key) -> float:
     return prompts.shape[0] * gen / (time.perf_counter() - t0)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def _resolve_deprecated(args, old: str, new: str):
+    """Old flag still works but warns; the new flag wins when both given."""
+    old_v, new_v = getattr(args, old), getattr(args, new)
+    if old_v is not None:
+        warnings.warn(
+            f"--{old.replace('_', '-')} is deprecated; use "
+            f"--{new.replace('_', '-')} (see launch.engine.Request)",
+            DeprecationWarning, stacklevel=2)
+        if new_v is None:
+            setattr(args, new, old_v)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """Flags mirror EngineConfig / Request fields; --batch and --gen are
+    deprecated aliases kept for old scripts."""
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="rwkv6-7b")
     ap.add_argument("--epitome", default="off")
     ap.add_argument("--plan", default="",
@@ -107,68 +130,83 @@ def main():
                          "sharded serving; default: pure data parallelism "
                          "over all devices")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of prompts to serve (default 4)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="deprecated alias of --requests")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=None,
+                    help="tokens to generate per request (default 16)")
+    ap.add_argument("--gen", type=int, default=None,
+                    help="deprecated alias of --max-new-tokens")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples every generated token")
-    args = ap.parse_args()
+    ap.add_argument("--engine", action="store_true",
+                    help="also serve the prompts through the "
+                         "continuous-batching EpimEngine (one request per "
+                         "prompt) and report TTFT + agreement")
+    return ap
 
-    plan = None
-    if args.plan:
-        from ..pim.plan import EpitomePlan
-        plan = EpitomePlan.load(args.plan)
-    cfg = (get_smoke_config(args.arch, args.epitome, plan=plan) if args.smoke
-           else get_config(args.arch, args.epitome, plan=plan))
-    if args.mesh:
-        data, model = parse_mesh(args.mesh)
-        mesh = (mesh_for_plan(plan, data=data, model=model) if plan is not None
-                else make_host_mesh(data=data, model=model))
-    else:
-        mesh = make_host_mesh(data=len(jax.devices()))
-    set_mesh(mesh)
+
+def main():
+    args = build_parser().parse_args()
+    _resolve_deprecated(args, "batch", "requests")
+    _resolve_deprecated(args, "gen", "max_new_tokens")
+    n_req = 4 if args.requests is None else args.requests
+    gen = 16 if args.max_new_tokens is None else args.max_new_tokens
+    max_len = args.prompt_len + gen + 1
+
+    engine = EngineConfig(
+        arch=args.arch, epitome=args.epitome, plan=args.plan or None,
+        mesh=args.mesh, smoke=args.smoke, capacity=n_req, max_len=max_len,
+        seed=args.seed).build()
+    cfg, packed = engine.cfg, engine.packed
+    served = engine.serve_params
     # the mesh that actually runs (make_host_mesh clamps to the device
     # count), so the smoke tok/s numbers below are attributable
-    print(f"[serve] mesh: {dict(mesh.shape)} over "
+    print(f"[serve] mesh: {dict(engine.mesh.shape)} over "
           f"{len(jax.devices())} device(s)")
-    # independent streams for params / prompts / sampling (one shared key
-    # would correlate the prompt draw with the weight init)
-    init_key, prompt_key, sample_key = jax.random.split(
-        jax.random.PRNGKey(args.seed), 3)
-    params = lm.init_params(init_key, cfg)
-    # weight-stationary serving: kernel x quant epitomes pack to int8 once
-    # here — laid out across the mesh by the plan's per-layer placement when
-    # --mesh names one; without the prepack every jitted forward would
-    # re-quantize every epitome, forfeiting the storage/bandwidth win
-    shard_mesh = mesh if args.mesh else None
-    packed = (lm.prepack_params(params, cfg, mesh=shard_mesh)
-              if lm.needs_prepack(cfg) else None)
-    if shard_mesh is not None:
-        params = lm.shard_params(params, cfg, shard_mesh)
-    prompts = jax.random.randint(prompt_key, (args.batch, args.prompt_len),
+    prompts = jax.random.randint(engine.prompt_key, (n_req, args.prompt_len),
                                  0, cfg.vocab)
     label = args.plan if args.plan else args.epitome
     t0 = time.perf_counter()
-    toks, _ = generate(packed if packed is not None else params, cfg, prompts,
-                       args.prompt_len + args.gen + 1, args.gen,
-                       temperature=args.temperature, key=sample_key)
+    toks, _ = generate(served, cfg, prompts, max_len, gen,
+                       temperature=args.temperature, key=engine.sample_key)
     jax.block_until_ready(toks)
     dt = time.perf_counter() - t0
     print(f"[serve] {args.arch} epitome={label}"
           f"{' (prepacked)' if packed is not None else ''}: generated "
           f"{toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({n_req * gen / dt:.1f} tok/s)")
     print("[serve] sample:", jax.device_get(toks[0])[:16].tolist())
     if packed is not None:
-        max_len = args.prompt_len + args.gen + 1
-        tw = lambda p: _warm_tok_s(p, cfg, prompts, max_len, args.gen,
-                                   args.temperature, sample_key)
-        warm_packed, warm_otf = tw(packed), tw(params)
+        tw = lambda p: _warm_tok_s(p, cfg, prompts, max_len, gen,
+                                   args.temperature, engine.sample_key)
+        warm_packed, warm_otf = tw(packed), tw(engine.params)
         print(f"[serve] warm tok/s: prepacked={warm_packed:.1f} "
               f"on-the-fly={warm_otf:.1f} "
               f"(x{warm_packed / warm_otf:.2f}; prepack skips the per-call "
               f"epitome re-quantize)")
+    if args.engine:
+        host_prompts = jax.device_get(prompts)
+        for row in host_prompts:
+            engine.submit(Request(prompt=row, max_new_tokens=gen,
+                                  temperature=args.temperature,
+                                  seed=args.seed))
+        comps = engine.drain()
+        ttfts = sorted(c.ttft_s for c in comps)
+        line = (f"[serve] engine: completed={len(comps)} "
+                f"p50_ttft={ttfts[len(ttfts) // 2] * 1e3:.1f}ms "
+                f"steps={engine.stats['decode_steps']} "
+                f"prefill_traces={engine.stats['prefill_traces']}")
+        if args.temperature == 0.0:
+            # greedy: the engine rows must reproduce the one-shot batch
+            ref = jax.device_get(toks)
+            same = all(tuple(ref[i]) == comps[i].tokens
+                       for i in range(len(comps)))
+            line += f" bit_identical={same}"
+        print(line)
 
 
 if __name__ == "__main__":

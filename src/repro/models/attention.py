@@ -189,21 +189,32 @@ def decode_attention(params: dict, x: Array, cache: dict,
                      pos: Array, cfg: ModelConfig, *, local: bool = False,
                      prefix: str = "") -> Tuple[Array, dict]:
     """One decode step.  x: (B, 1, d); cache: {k, v[, k_s, v_s]} with
-    k/v (B, Smax, Hkv, hd); pos: scalar int32 write index.
-    Returns (out, new cache)."""
+    k/v (B, Smax, Hkv, hd); pos: scalar int32 write index, or a (B,)
+    vector of per-row write indices (continuous batching: every slot of
+    the engine's state pool decodes at its own position).  Per-row values
+    are bit-identical to the scalar path at the same position — the
+    vector form only changes where cache rows are written and how the
+    causal mask broadcasts.  Returns (out, new cache)."""
     B, _, d = x.shape
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     G = nq // nkv
     Smax = cache["k"].shape[1]
+    per_row = jnp.ndim(pos) == 1                   # (B,) per-slot positions
     q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd, _nm(prefix, "wq"))).reshape(B, 1, nq, hd)
     k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wk"))).reshape(B, 1, nkv, hd)
     v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wv"))).reshape(B, 1, nkv, hd)
-    posv = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos[None]
+    posv = (pos[:, None] if per_row else
+            jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos[None])
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
     cache = dict(cache)
-    upd = lambda c, t: jax.lax.dynamic_update_slice_in_dim(
-        c, t.astype(c.dtype), pos, 1)
+    if per_row:
+        upd = lambda c, t: jax.vmap(
+            lambda cb, tb, pb: jax.lax.dynamic_update_slice_in_dim(
+                cb, tb.astype(cb.dtype), pb, 0))(c, t, pos)
+    else:
+        upd = lambda c, t: jax.lax.dynamic_update_slice_in_dim(
+            c, t.astype(c.dtype), pos, 1)
     if cfg.kv_cache_bits == 8:
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
@@ -221,10 +232,17 @@ def decode_attention(params: dict, x: Array, cache: dict,
     s = jnp.einsum("bhgd,bshd->bhgs", qg, kc) / math.sqrt(hd)
     s = softcap(s, cfg.attn_softcap)
     kv_pos = jnp.arange(Smax)
-    mask = kv_pos <= pos
-    if local and cfg.window:
-        mask = mask & (kv_pos > pos - cfg.window)
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    if per_row:
+        mask = kv_pos[None, :] <= pos[:, None]             # (B, Smax)
+        if local and cfg.window:
+            mask = mask & (kv_pos[None, :] > pos[:, None] - cfg.window)
+        mask = mask[:, None, None, :]
+    else:
+        mask = kv_pos <= pos
+        if local and cfg.window:
+            mask = mask & (kv_pos > pos - cfg.window)
+        mask = mask[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, vc)
     o = o.reshape(B, 1, nq * hd).astype(x.dtype)

@@ -112,10 +112,19 @@ def apply_group(params: Dict[str, Any], x: Array, cfg: ModelConfig,
 
 
 def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
-                  cfg: ModelConfig, positions: Optional[Array] = None
+                  cfg: ModelConfig, positions: Optional[Array] = None,
+                  valid_len: Optional[Array] = None
                   ) -> Tuple[Array, Dict[str, Any]]:
     """Full-sequence forward that also fills the decode state (KV caches are
-    written into the pre-allocated max_len buffers of ``state``)."""
+    written into the pre-allocated max_len buffers of ``state``).
+
+    ``valid_len`` (traced scalar) marks a right-padded bucketed prefill
+    (launch/engine.py): only the first ``valid_len`` tokens are real.  The
+    SSM mixers mask their recurrences so pads leave the carried state
+    exactly as it stood after the last real token; attention needs no
+    masking — pad K/V beyond ``valid_len - 1`` are causally invisible to
+    real queries and get overwritten by decode steps before any mask ever
+    reaches them."""
     for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
         layer = params[f"L{i}"]
         st = state[f"L{i}"]
@@ -143,12 +152,12 @@ def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
         elif kind == LayerKind.MAMBA.value:
             mix, (conv, hst) = mamba_mix(layer["mixer"], h, cfg,
                                          state=(st["conv"].astype(h.dtype), st["h"]),
-                                         prefix=mixer_p)
+                                         prefix=mixer_p, valid_len=valid_len)
             ns["conv"], ns["h"] = conv.astype(st["conv"].dtype), hst
         elif kind == LayerKind.RWKV.value:
             mix, (xp, s) = rwkv_time_mix(layer["mixer"], h, cfg,
                                          state=(st["x_prev"].astype(h.dtype), st["s"]),
-                                         prefix=mixer_p)
+                                         prefix=mixer_p, valid_len=valid_len)
             ns["x_prev"], ns["s"] = xp.astype(st["x_prev"].dtype), s
         x = x + mix
         if ffn_kind != "none":
@@ -161,7 +170,7 @@ def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
                 f, xp2 = rwkv_channel_mix(layer["ffn"], h, cfg,
                                           x_prev=st.get("ffn_x_prev", jnp.zeros(
                                               (x.shape[0], cfg.d_model), x.dtype)).astype(h.dtype),
-                                          prefix=ffn_p)
+                                          prefix=ffn_p, valid_len=valid_len)
                 ns["ffn_x_prev"] = xp2.astype(cfg.cdtype)
             x = x + f
         state = {**state, f"L{i}": ns}

@@ -314,9 +314,52 @@ def state_specs(cfg: ModelConfig, state_shape: Dict[str, Any],
     return walk(state_shape, "")
 
 
+# ---------------------------------------------------------------------------
+# Slot-pooled decode state (continuous batching; launch/engine.py)
+#
+# The engine owns ONE decode-state tree whose batch axis (axis 1, after the
+# stacked group axis) is a pool of request slots: dense fixed-size
+# recurrent state per slot for the SSM arches, and a block of max_len KV
+# rows per slot for attention arches (one contiguous block per slot,
+# free-list managed by the engine).  A finished request frees its slot and
+# the next admission scatters a fresh prefill state over it.
+# ---------------------------------------------------------------------------
+def init_state_pool(cfg: ModelConfig, capacity: int,
+                    max_len: int) -> Dict[str, Any]:
+    """Pooled decode state for ``capacity`` request slots.  Identical
+    geometry to ``init_decode_state`` — slot i of the pool is batch row i —
+    so the scanned decode runs on the pool unchanged."""
+    return init_decode_state(cfg, capacity, max_len)
+
+
+def scatter_slot_state(pool: Dict[str, Any], one: Dict[str, Any],
+                       slot: Array) -> Dict[str, Any]:
+    """Write a single-request state tree (batch 1) into pool slot ``slot``
+    (traced scalar — one compiled program serves every slot)."""
+    return jax.tree.map(
+        lambda p, o: jax.lax.dynamic_update_slice_in_dim(
+            p, o.astype(p.dtype), slot, 1), pool, one)
+
+
+def gather_slot_state(pool: Dict[str, Any], slot: Array) -> Dict[str, Any]:
+    """Read slot ``slot`` back out as a batch-1 state tree (preemption /
+    debugging mirror of scatter_slot_state)."""
+    return jax.tree.map(
+        lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, 1), pool)
+
+
 def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
-            cfg: ModelConfig) -> Tuple[Array, Dict[str, Any]]:
-    """Run the prompt, fill decode state.  Returns (last-token logits, state)."""
+            cfg: ModelConfig, valid_len: Optional[Array] = None
+            ) -> Tuple[Array, Dict[str, Any]]:
+    """Run the prompt, fill decode state.  Returns (last-token logits, state).
+
+    ``valid_len`` (traced scalar) marks a right-padded bucketed prefill
+    (launch/engine.py pads prompts up to power-of-two buckets so distinct
+    prompt lengths share one compiled program): only the first
+    ``valid_len`` tokens are real.  The returned logits are gathered at
+    the last *real* token and the per-layer states are masked so pads
+    never touch them — the result is bit-identical to an unpadded prefill
+    of the same prompt."""
     if inputs.ndim == 2:
         x = embed_lookup(params["embed"], inputs, cfg.cdtype)
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
@@ -325,12 +368,15 @@ def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
 
     def scan_fn(x, gs):
         group_params, group_state = gs
-        x, new_state = prefill_group(group_params, group_state, x, cfg)
+        x, new_state = prefill_group(group_params, group_state, x, cfg,
+                                     valid_len=valid_len)
         return x, new_state
 
     x, new_states = jax.lax.scan(scan_fn, x, (params["groups"], state),
                                  unroll=min(SCAN_UNROLL, cfg.n_groups))
-    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    x_last = (x[:, -1:] if valid_len is None else
+              jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, 1))
+    x = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
     head = params.get("head", params["embed"].T if cfg.tie_embeddings else None)
     logits = unembed(x, head, cfg.logit_softcap)
     return logits, new_states
@@ -339,7 +385,9 @@ def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
 def decode_step(params: Dict[str, Any], state: Dict[str, Any], token: Array,
                 pos: Array, cfg: ModelConfig
                 ) -> Tuple[Array, Dict[str, Any]]:
-    """token: (B, 1) int32 (or (B, 1, d) embeddings); pos: scalar int32.
+    """token: (B, 1) int32 (or (B, 1, d) embeddings); pos: scalar int32,
+    or (B,) int32 per-row positions (continuous batching: every slot of
+    the engine's state pool sits at its own sequence position).
     Returns (logits (B, 1, vocab), new state)."""
     if token.ndim == 2:
         x = embed_lookup(params["embed"], token, cfg.cdtype)

@@ -168,9 +168,20 @@ def rwkv_step(r, k, v, logw, u, state):
 
 def rwkv_time_mix(p: dict, x: Array, cfg: ModelConfig,
                   state: Optional[Tuple[Array, Array]] = None,
-                  chunk: int = 0, prefix: str = ""):
+                  chunk: int = 0, prefix: str = "",
+                  valid_len: Optional[Array] = None):
     chunk = chunk or cfg.rwkv_chunk
-    """Full RWKV6 time-mixing block.  state = (x_prev (B,d), S (B,H,K,K))."""
+    """Full RWKV6 time-mixing block.  state = (x_prev (B,d), S (B,H,K,K)).
+
+    ``valid_len`` (traced scalar) marks a right-padded prefill: only the
+    first ``valid_len`` tokens are real.  Pad tokens must not touch the
+    carried state, and the real tokens' outputs must keep their exact
+    bits: zeroing k kills the pads' kv outer products in the state carry
+    (their intra-chunk score contributions are already strictly-causal
+    masked for real rows), and zeroing logw makes their decay exp(0)=1 so
+    the decay cumsum is constant past the last real token — real-token
+    prefixes of the cumsum are untouched because the pads sit strictly
+    after them."""
     B, S, d = x.shape
     H = cfg.n_heads
     K = d // H
@@ -182,6 +193,10 @@ def rwkv_time_mix(p: dict, x: Array, cfg: ModelConfig,
     r, k, v, g, logw = _rwkv_inputs(p, x, x_prev, cfg, prefix)
     rh, kh, vh = _heads(r, H), _heads(k, H), _heads(v, H)
     lwh = _heads(logw, H)
+    if valid_len is not None:
+        m = (jnp.arange(S) < valid_len)[None, :, None, None]
+        kh = jnp.where(m, kh, jnp.zeros((), kh.dtype))
+        lwh = jnp.where(m, lwh, jnp.zeros((), lwh.dtype))
     rh = shard(rh, BATCH_AXES, None, TENSOR_AXIS, None)
     kh = shard(kh, BATCH_AXES, None, TENSOR_AXIS, None)
     vh = shard(vh, BATCH_AXES, None, TENSOR_AXIS, None)
@@ -199,7 +214,9 @@ def rwkv_time_mix(p: dict, x: Array, cfg: ModelConfig,
     o = ((o32 - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, d)
     o = (o * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
     out = apply_linear(p["wo"], o * g, cfg.ep(d, d, _nm(prefix, "wo")))
-    new_state = (x[:, -1], S1)
+    x_last = (x[:, -1] if valid_len is None else
+              jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, 1)[:, 0])
+    new_state = (x_last, S1)
     return out, new_state
 
 
@@ -225,7 +242,11 @@ def init_rwkv_ffn(key: Array, cfg: ModelConfig, prefix: str = "") -> dict:
 
 
 def rwkv_channel_mix(p: dict, x: Array, cfg: ModelConfig,
-                     x_prev: Optional[Array] = None, prefix: str = ""):
+                     x_prev: Optional[Array] = None, prefix: str = "",
+                     valid_len: Optional[Array] = None):
+    """Pointwise over (shifted) positions, so a right-padded prefill only
+    needs the carried x_prev gathered at the last *real* token
+    (``valid_len - 1``) instead of the last position."""
     B, S, d = x.shape
     if x_prev is None:
         x_prev = jnp.zeros((B, d), x.dtype)
@@ -236,7 +257,9 @@ def rwkv_channel_mix(p: dict, x: Array, cfg: ModelConfig,
     k = jnp.square(jax.nn.relu(k))
     kv = apply_linear(p["wv"], k, cfg.ep(cfg.d_ff, d, _nm(prefix, "wv")))
     r = jax.nn.sigmoid(apply_linear(p["wr"], xr, cfg.ep(d, d, _nm(prefix, "wr"))))
-    return r * kv, x[:, -1]
+    x_last = (x[:, -1] if valid_len is None else
+              jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, 1)[:, 0])
+    return r * kv, x_last
 
 
 # ===========================================================================
@@ -282,9 +305,16 @@ def _mamba_scan_chunk(dA, dBx, h0):
 
 def mamba_mix(p: dict, x: Array, cfg: ModelConfig,
               state: Optional[Tuple[Array, Array]] = None,
-              chunk: int = 0, prefix: str = ""):
+              chunk: int = 0, prefix: str = "",
+              valid_len: Optional[Array] = None):
     chunk = chunk or cfg.mamba_chunk
-    """Mamba block.  state = (conv buffer (B, dc-1, di), h (B, di, ds))."""
+    """Mamba block.  state = (conv buffer (B, dc-1, di), h (B, di, ds)).
+
+    ``valid_len`` (traced scalar) marks a right-padded prefill: pad
+    positions get dt forced to 0 so their scan elements are the exact
+    identity (dA=exp(0)=1, dBx=0 — the same trick the chunk padding
+    already relies on), and the carried conv window is gathered ending at
+    the last real token instead of the last position."""
     B, S, d = x.shape
     di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
     dt_rank = max(1, d // 16)
@@ -304,7 +334,14 @@ def mamba_mix(p: dict, x: Array, cfg: ModelConfig,
     cw = p["conv_w"].astype(xi.dtype)
     xc = sum(xpad[:, i:i + S] * cw[i][None, None] for i in range(dc))
     xc = jax.nn.silu(xc + p["conv_b"].astype(xi.dtype))
-    new_conv = xpad[:, -(dc - 1):] if dc > 1 else conv_buf
+    if dc > 1:
+        # carried window = the last dc-1 inputs up to the last real token:
+        # xpad[valid_len : valid_len + dc - 1] (== the trailing window when
+        # the whole sequence is real)
+        new_conv = (xpad[:, -(dc - 1):] if valid_len is None else
+                    jax.lax.dynamic_slice_in_dim(xpad, valid_len, dc - 1, 1))
+    else:
+        new_conv = conv_buf
 
     # input-dependent SSM parameters
     proj = apply_linear(p["x_proj"], xc,
@@ -313,6 +350,9 @@ def mamba_mix(p: dict, x: Array, cfg: ModelConfig,
     dt = jax.nn.softplus(apply_linear(
         p["dt_proj"], dt, cfg.ep(dt_rank, di, _nm(prefix, "dt_proj"))))
     dt = shard(dt, BATCH_AXES, None, TENSOR_AXIS)
+    if valid_len is not None:
+        dt = jnp.where((jnp.arange(S) < valid_len)[None, :, None], dt,
+                       jnp.zeros((), dt.dtype))
     A = -jnp.exp(p["A_log"])                               # (di, ds)
 
     # chunked scan over the sequence.  Discretization (dA, dBx — the

@@ -1,0 +1,273 @@
+"""Continuous-batching engine: request-level API acceptance tests.
+
+The engine's contract: for any single request, its output is bit-identical
+to the pre-existing one-shot path (``serve.generate`` with the same
+``max_len`` and ``key=jax.random.PRNGKey(request.seed)``) — greedy and
+sampled, any batch composition, any arrival order, any slot.  The
+scheduler-level properties (slot reuse, bounded prefill retraces via
+power-of-two prompt buckets, MoE exact-length fallback) are pinned by the
+engine's ``stats`` counters.
+
+The forced 8-device mesh test boots jax in a subprocess (slow lane), like
+tests/test_sharded_plan.py, whose ``run_py`` harness it reuses.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.launch import serve
+from repro.launch.engine import (
+    Completion, EngineConfig, EpimEngine, Request,
+)
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def engine_factory():
+    """Fresh engines over one shared (cfg, max_len): module-level jits are
+    keyed on those, so every engine after the first reuses compiled code."""
+    def make(capacity=3, **kw):
+        kw.setdefault("arch", "rwkv6-7b")
+        kw.setdefault("epitome", "kernel-q3")
+        return EngineConfig(smoke=True, mesh=None, capacity=capacity,
+                            max_len=MAX_LEN, **kw).build()
+    return make
+
+
+def _prompt(rng, n, vocab):
+    return tuple(int(t) for t in rng.integers(0, vocab, size=n))
+
+
+def _reference(eng, req: Request):
+    """The one-shot serve path on the same params / max_len / key."""
+    prompts = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+    toks, _ = serve.generate(eng.serve_params, eng.cfg, prompts, eng.max_len,
+                             req.max_new_tokens, temperature=req.temperature,
+                             key=jax.random.PRNGKey(req.seed))
+    return tuple(int(t) for t in np.asarray(toks)[0])
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs the one-shot serve path
+# ---------------------------------------------------------------------------
+def test_engine_bit_identical_greedy(engine_factory):
+    eng = engine_factory(capacity=3)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=_prompt(rng, p, eng.cfg.vocab), max_new_tokens=6)
+            for p in (5, 9, 13, 21)]       # buckets 8 / 16 / 16 / 32
+    handles = [eng.submit(r) for r in reqs]
+    comps = eng.drain()
+    assert [c.request_id for c in comps] == [h.request_id for h in handles]
+    for req, comp in zip(reqs, comps):
+        assert comp.tokens == _reference(eng, req)
+        assert len(comp.tokens) == req.max_new_tokens
+        assert comp.ttft_s > 0 and comp.latency_s >= comp.ttft_s
+
+
+def test_engine_bit_identical_sampled(engine_factory):
+    """Sampled decoding folds the REQUEST's key, split once per token in
+    serve._select order — mixed temperatures in one decode batch included."""
+    eng = engine_factory(capacity=3)
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=_prompt(rng, p, eng.cfg.vocab), max_new_tokens=5,
+                    temperature=t, seed=100 + i)
+            for i, (p, t) in enumerate([(5, 0.7), (9, 0.0), (12, 1.3)])]
+    for r in reqs:
+        eng.submit(r)
+    comps = eng.drain()
+    for req, comp in zip(reqs, comps):
+        assert comp.tokens == _reference(eng, req)
+
+
+def test_engine_rng_arrival_order_invariant(engine_factory):
+    """A request's sampled continuation depends only on its own seed —
+    never on the order requests arrived or the slot they landed in."""
+    rng = np.random.default_rng(2)
+    vocab = get_smoke_config("rwkv6-7b", "kernel-q3").vocab
+    reqs = [Request(prompt=_prompt(rng, 4 + 3 * i, vocab), max_new_tokens=4,
+                    temperature=0.9, seed=7 + i) for i in range(4)]
+
+    def serve_order(order):
+        eng = engine_factory(capacity=2)   # forces queueing + slot reuse
+        handles = {i: eng.submit(reqs[i]) for i in order}
+        eng.drain()
+        return {i: h.result().tokens for i, h in handles.items()}
+
+    fwd = serve_order([0, 1, 2, 3])
+    rev = serve_order([3, 1, 0, 2])
+    assert fwd == rev
+
+
+def test_engine_bit_identical_attention_arch(engine_factory):
+    """Same contract on a pure-attention arch (per-slot KV blocks, vector
+    decode positions)."""
+    eng = engine_factory(capacity=2, arch="qwen2-72b", epitome="off")
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=_prompt(rng, p, eng.cfg.vocab), max_new_tokens=5,
+                    temperature=t, seed=50 + i)
+            for i, (p, t) in enumerate([(6, 0.0), (11, 0.8), (9, 0.0)])]
+    for r in reqs:
+        eng.submit(r)
+    comps = eng.drain()
+    for req, comp in zip(reqs, comps):
+        assert comp.tokens == _reference(eng, req)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: slots, buckets, retraces
+# ---------------------------------------------------------------------------
+def test_slot_reuse_mid_flight(engine_factory):
+    """5 requests through 2 slots: finished requests free their slot and
+    pending requests are admitted without waiting for the batch."""
+    eng = engine_factory(capacity=2)
+    rng = np.random.default_rng(4)
+    reqs = [Request(prompt=_prompt(rng, 5, eng.cfg.vocab),
+                    max_new_tokens=2 + i) for i in range(5)]
+    handles = [eng.submit(r) for r in reqs]
+    assert eng.n_active == 2 and eng.n_pending == 3
+    comps = eng.drain()
+    assert eng.stats["completed"] == 5
+    assert eng.stats["slot_reuses"] == 3   # admissions beyond capacity
+    for req, h, c in zip(reqs, handles, comps):
+        assert h.done() and h.result() is c
+        assert len(c.tokens) == req.max_new_tokens
+
+
+def test_bucketed_prefill_bounds_retraces(engine_factory):
+    """Prompt lengths pad to power-of-two buckets: retraces are counted by
+    DISTINCT BUCKETS, not distinct lengths.  A unique max_len gives this
+    test its own jit cache entry so the counter starts cold."""
+    eng = EngineConfig(arch="rwkv6-7b", epitome="kernel-q3", smoke=True,
+                       mesh=None, capacity=4, max_len=40).build()
+    rng = np.random.default_rng(5)
+    for p in (5, 6, 8):                    # all bucket 8
+        eng.submit(Request(prompt=_prompt(rng, p, eng.cfg.vocab),
+                           max_new_tokens=2))
+    eng.drain()
+    assert eng.stats["prefill_traces"] == 1
+    for p in (9, 16, 4, 7):                # bucket 16 is the only new one
+        eng.submit(Request(prompt=_prompt(rng, p, eng.cfg.vocab),
+                           max_new_tokens=2))
+    eng.drain()
+    assert eng.stats["prefill_traces"] == 2
+
+
+def test_moe_arch_prefills_exact_length():
+    """MoE capacity routing couples batch rows (pads would consume expert
+    queue ranks) — those arches must bypass bucketing."""
+    moe = EpimEngine(get_smoke_config("phi3.5-moe-42b-a6.6b"), None,
+                     capacity=1, max_len=32)
+    assert not moe.bucket_prompts
+    assert moe._bucket(5) == 5
+    ssm = EpimEngine(get_smoke_config("rwkv6-7b"), None,
+                     capacity=1, max_len=32)
+    assert ssm.bucket_prompts
+    assert ssm._bucket(5) == 8 and ssm._bucket(9) == 16
+    assert ssm._bucket(30) == 32 and ssm._bucket(2) == 8
+
+
+def test_single_token_request_completes_at_admission(engine_factory):
+    eng = engine_factory(capacity=1)
+    rng = np.random.default_rng(6)
+    req = Request(prompt=_prompt(rng, 5, eng.cfg.vocab), max_new_tokens=1)
+    steps_before = eng.stats["decode_steps"]
+    h = eng.submit(req)
+    assert h.done()                        # no decode step needed
+    assert eng.stats["decode_steps"] == steps_before
+    assert h.result().tokens == _reference(eng, req)
+
+
+def test_submit_validation():
+    eng = EpimEngine(get_smoke_config("rwkv6-7b"), None,
+                     capacity=1, max_len=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(prompt=()))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(prompt=(1, 2), max_new_tokens=0))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=(1,) * 12, max_new_tokens=8))
+    from repro.launch.engine import RequestHandle, _Record
+    with pytest.raises(RuntimeError, match="not finished"):
+        RequestHandle(_Record(0, Request(prompt=(1,)), 0.0)).result()
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig as the one setup path
+# ---------------------------------------------------------------------------
+def test_engine_config_build_exposes_setup(engine_factory):
+    eng = engine_factory(capacity=1)
+    from repro.models import lm
+    assert lm.needs_prepack(eng.cfg)
+    assert eng.packed is not None and eng.serve_params is eng.packed
+    assert eng.mesh is None                # mesh=None leaves the mesh alone
+    assert eng.prompt_key is not None and eng.sample_key is not None
+    assert eng.config.capacity == 1 and eng.config.max_len == MAX_LEN
+
+    plain = EngineConfig(arch="rwkv6-7b", epitome="off", smoke=True,
+                         mesh=None, capacity=1, max_len=MAX_LEN).build()
+    assert plain.packed is None and plain.serve_params is plain.params
+
+
+def test_serve_deprecated_flags_warn(monkeypatch, capsys):
+    """--batch/--gen still run but warn toward the Request fields."""
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--arch", "rwkv6-7b", "--smoke", "--batch", "1",
+        "--prompt-len", "4", "--gen", "2"])
+    with pytest.warns(DeprecationWarning, match="--requests"):
+        with pytest.warns(DeprecationWarning, match="--max-new-tokens"):
+            serve.main()
+    out = capsys.readouterr().out
+    assert "generated (1, 2)" in out
+
+
+def test_serving_bench_smoke(engine_factory):
+    """The open-loop Poisson driver completes every request and its
+    replayed request is bit-identical to the one-shot path."""
+    from benchmarks.serving_bench import run_serving
+    m = run_serving(n_requests=3, rate_hz=200.0, max_new=3, capacity=2,
+                    max_len=MAX_LEN)
+    assert m["completed"] == 3
+    assert m["bit_identical"] is True
+    assert m["tok_s"] > 0
+    assert 0 < m["p50_ttft_ms"] <= m["p99_ttft_ms"]
+
+
+# ---------------------------------------------------------------------------
+# Forced 8-device mesh (subprocess; slow lane)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_sharded_mesh_bit_identical():
+    """The engine on a (2, 4) host mesh serves requests bit-identical to
+    the one-shot sharded path — slots, buckets and per-request RNG all
+    survive sharded weight-stationary serving."""
+    from test_sharded_plan import run_py
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch import serve
+        from repro.launch.engine import EngineConfig, Request
+
+        eng = EngineConfig(arch="rwkv6-7b", epitome="kernel-q3", smoke=True,
+                           mesh="2,4", capacity=2, max_len=32).build()
+        assert dict(eng.mesh.shape) == {"data": 2, "model": 4}
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt=tuple(int(t) for t in
+                                     rng.integers(0, eng.cfg.vocab, p)),
+                        max_new_tokens=6, temperature=t, seed=5 + i)
+                for i, (p, t) in enumerate([(5, 0.0), (9, 0.8), (13, 0.0)])]
+        for r in reqs:
+            eng.submit(r)
+        comps = eng.drain()
+        assert eng.stats["slot_reuses"] == 1
+        for r, c in zip(reqs, comps):
+            ref, _ = serve.generate(
+                eng.serve_params, eng.cfg,
+                jnp.asarray(np.asarray(r.prompt, np.int32)[None]),
+                eng.max_len, r.max_new_tokens, temperature=r.temperature,
+                key=jax.random.PRNGKey(r.seed))
+            assert tuple(int(x) for x in np.asarray(ref)[0]) == c.tokens
+        print("ENGINE SHARDED OK")
+    """)
