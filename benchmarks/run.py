@@ -79,8 +79,10 @@ def main() -> None:
         # sharded serving smoke: meaningful when the process has > 1
         # device (CI forces 8 CPU host devices via XLA_FLAGS)
         "sharded": kernels_bench.sharded_plan,
-        # continuous-batching engine under Poisson load (TTFT / tok/s)
-        "serving": serving_bench.serving_smoke,
+        # continuous-batching engine under Poisson load (TTFT / tok/s),
+        # plus the paged+chunked vs dense long-prompt stall probe
+        "serving": lambda e: (serving_bench.serving_smoke(e),
+                              serving_bench.paged_smoke(e)),
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

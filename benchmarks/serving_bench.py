@@ -7,15 +7,26 @@ exactly as it would under real load) and reports:
   p50/p99 TTFT       submit -> first token, milliseconds
   mean per-token     decode latency per generated token, milliseconds
   tok/s              total generated tokens / wall time
+  qwait p50/p99      submit -> admission (slot + KV pages), milliseconds
+  max_gap_ms         worst inter-token decode gap any request saw
+  pages hwm/total    block-paged KV pool occupancy high-water mark
   bit_identical      one request replayed through the one-shot
                      ``serve.generate`` path with the same seed/max_len
                      must reproduce the engine's tokens exactly
+
+``run_stall_probe`` is the paged-vs-dense A/B the CI row
+``kernels/serving-paged-smoke`` gates: short requests decode while one
+long prompt arrives mid-flight.  Dense whole-prompt prefill stalls every
+decoder for the full prompt; chunked prefill bounds the stall at one
+chunk — the probe reports the short requests' max inter-token gap under
+both state layers (same tokens, bit-identical) plus the KV bytes each
+pool holds (the paged pool is deliberately oversubscribed).
 
 Standalone:
   PYTHONPATH=src python benchmarks/serving_bench.py --requests 6 --rate 50
 
 or as the ``serving`` section of benchmarks.run (CI gates the emitted
-``kernels/serving-smoke`` CSV row).
+``kernels/serving-smoke`` and ``kernels/serving-paged-smoke`` CSV rows).
 """
 from __future__ import annotations
 
@@ -91,6 +102,9 @@ def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
         bit_identical = tuple(int(t) for t in np.asarray(ref)[0]) == c.tokens
 
     stats = eng.stats
+    qwaits_ms = np.array([c.queue_wait_s for c in comps]) * 1e3
+    gaps = [np.diff(c.token_times) for c in comps if len(c.token_times) > 1]
+    max_gap_ms = float(max((g.max() for g in gaps), default=0.0)) * 1e3
     return {
         "arch": arch, "epitome": epitome, "completed": len(comps),
         "p50_ttft_ms": float(np.percentile(ttfts_ms, 50)),
@@ -101,6 +115,96 @@ def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
         "prefill_traces": stats["prefill_traces"],
         "decode_steps": stats["decode_steps"] - base["decode_steps"],
         "slot_reuses": stats["slot_reuses"] - base["slot_reuses"],
+        "qwait_p50_ms": float(np.percentile(qwaits_ms, 50)),
+        "qwait_p99_ms": float(np.percentile(qwaits_ms, 99)),
+        "max_gap_ms": max_gap_ms,
+        "pages_hwm": stats["pages_hwm"], "pages_total": stats["pages_total"],
+        "page_reuses": stats["page_reuses"],
+    }
+
+
+def _kv_pool_bytes(eng) -> int:
+    """Bytes the engine's attention KV state pins (paged pool or dense
+    per-slot blocks; 0 for attention-free arches)."""
+    from repro.models.kv_pool import paged_leaf_paths
+    kv = paged_leaf_paths(eng.cfg)
+    return sum(leaf.nbytes
+               for lk, layer in eng._pool.tree.items()
+               for k, leaf in layer.items() if f"{lk}/{k}" in kv)
+
+
+def run_stall_probe(*, arch: str = "qwen2-72b", epitome: str = "off",
+                    paged: bool = True, capacity: int = 3,
+                    max_len: int = 320, page_size: int = 16,
+                    kv_pages: int = 28, prefill_chunk: int = 64,
+                    long_prompt: int = 256, short_prompt: int = 8,
+                    short_new: int = 40, long_new: int = 8,
+                    warm_ticks: int = 10, seed: int = 0) -> dict:
+    """Long-prompt arrival vs active decoders, paged+chunked or dense.
+
+    Deterministic (no Poisson): two short requests decode; after
+    ``warm_ticks`` steps one ``long_prompt``-token request arrives; the
+    engine drains.  Returns the short requests' max inter-token gap (the
+    decode stall the prefill caused), TTFTs, KV bytes, and bit-identity
+    of EVERY request vs the one-shot path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import serve
+    from repro.launch.engine import EngineConfig, Request
+
+    eng = EngineConfig(
+        arch=arch, epitome=epitome, smoke=True, mesh=None,
+        capacity=capacity, max_len=max_len,
+        page_size=page_size if paged else 0,
+        kv_pages=kv_pages if paged else 0,
+        prefill_chunk=prefill_chunk if paged else 0,
+        seed=seed).build()
+    rng = np.random.default_rng(seed)
+    shorts = [Request(prompt=tuple(int(t) for t in
+                                   rng.integers(0, eng.cfg.vocab,
+                                                size=short_prompt)),
+                      max_new_tokens=short_new, seed=seed + i)
+              for i in range(2)]
+    long_req = Request(prompt=tuple(int(t) for t in
+                                    rng.integers(0, eng.cfg.vocab,
+                                                 size=long_prompt)),
+                       max_new_tokens=long_new, seed=seed + 99)
+
+    # warm every program the timed phase hits (short bucket, long prefill
+    # — chunked or bucketed — and the pooled decode), then measure
+    eng.submit(Request(prompt=long_req.prompt, max_new_tokens=2))
+    eng.submit(Request(prompt=shorts[0].prompt, max_new_tokens=2))
+    eng.drain()
+
+    handles = [eng.submit(r) for r in shorts]
+    for _ in range(warm_ticks):
+        eng.step()
+    h_long = eng.submit(long_req)
+    eng.drain()
+    comps = [h.result() for h in handles]
+    long_c = h_long.result()
+
+    gaps = [np.diff(c.token_times) for c in comps if len(c.token_times) > 1]
+    max_gap_ms = float(max(g.max() for g in gaps)) * 1e3
+
+    identical = True
+    for r, c in [(shorts[0], comps[0]), (shorts[1], comps[1]),
+                 (long_req, long_c)]:
+        ref, _ = serve.generate(
+            eng.serve_params, eng.cfg,
+            jnp.asarray(np.asarray(r.prompt, np.int32)[None]), eng.seq_len,
+            r.max_new_tokens, temperature=r.temperature,
+            key=jax.random.PRNGKey(r.seed))
+        identical &= tuple(int(t) for t in np.asarray(ref)[0]) == c.tokens
+
+    stats = eng.stats
+    return {
+        "paged": paged, "max_gap_ms": max_gap_ms,
+        "long_ttft_ms": long_c.ttft_s * 1e3,
+        "kv_bytes": _kv_pool_bytes(eng),
+        "bit_identical": identical,
+        "prefill_chunks": stats["prefill_chunks"],
+        "pages_hwm": stats["pages_hwm"], "pages_total": stats["pages_total"],
     }
 
 
@@ -114,7 +218,33 @@ def serving_smoke(emit) -> None:
          f"tok_s={m['tok_s']:.1f};"
          f"bit_identical={m['bit_identical']};"
          f"prefill_traces={m['prefill_traces']};"
-         f"slot_reuses={m['slot_reuses']}")
+         f"slot_reuses={m['slot_reuses']};"
+         f"qwait_p50_ms={m['qwait_p50_ms']:.1f};"
+         f"qwait_p99_ms={m['qwait_p99_ms']:.1f};"
+         f"max_gap_ms={m['max_gap_ms']:.1f};"
+         f"pages_hwm={m['pages_hwm']};"
+         f"pages_total={m['pages_total']}")
+
+
+def paged_smoke(emit) -> None:
+    """benchmarks.run section: paged+chunked vs dense under a long-prompt
+    arrival.  CI gates bit_identical=True and stall_ratio < 1 (the paged
+    engine's worst decode gap must beat the dense baseline's)."""
+    p = run_stall_probe(paged=True)
+    d = run_stall_probe(paged=False)
+    ratio = p["max_gap_ms"] / max(d["max_gap_ms"], 1e-9)
+    emit("kernels/serving-paged-smoke", p["max_gap_ms"] * 1e3,
+         f"bit_identical={bool(p['bit_identical'] and d['bit_identical'])};"
+         f"max_gap_ms_paged={p['max_gap_ms']:.1f};"
+         f"max_gap_ms_dense={d['max_gap_ms']:.1f};"
+         f"stall_ratio={ratio:.3f};"
+         f"long_ttft_ms_paged={p['long_ttft_ms']:.1f};"
+         f"long_ttft_ms_dense={d['long_ttft_ms']:.1f};"
+         f"prefill_chunks={p['prefill_chunks']};"
+         f"pages_hwm={p['pages_hwm']};"
+         f"pages_total={p['pages_total']};"
+         f"kv_bytes_paged={p['kv_bytes']};"
+         f"kv_bytes_dense={d['kv_bytes']}")
 
 
 def main() -> None:
@@ -141,6 +271,10 @@ def main() -> None:
           f"per-token {m['mean_tok_ms']:.2f}ms; "
           f"prefill_traces={m['prefill_traces']} "
           f"slot_reuses={m['slot_reuses']}")
+    print(f"[serving] qwait p50={m['qwait_p50_ms']:.1f}ms "
+          f"p99={m['qwait_p99_ms']:.1f}ms; "
+          f"max inter-token gap {m['max_gap_ms']:.1f}ms; "
+          f"pages hwm={m['pages_hwm']}/{m['pages_total']}")
     print(f"[serving] bit_identical={m['bit_identical']}")
 
 

@@ -17,7 +17,10 @@ API reference
 ``Completion``
     Frozen result: ``request_id``, ``prompt_len``, ``tokens`` (the
     generated ids, prompt excluded), ``ttft_s`` (submit -> first token),
-    ``latency_s`` (submit -> last token).
+    ``latency_s`` (submit -> last token), ``queue_wait_s`` (submit ->
+    admission: how long the request sat behind slot/page scarcity), and
+    ``token_times`` (a perf_counter stamp per emitted token — the
+    serving benchmark derives inter-token decode gaps from these).
 
 ``RequestHandle``
     Returned by ``submit``; ``done()`` / ``result()`` poll the completion.
@@ -27,57 +30,93 @@ API reference
     ``epitome``, ``plan`` (path or EpitomePlan), ``mesh`` ('' = data
     parallel over all devices, 'DATA,MODEL' = explicit sharded mesh,
     ``None`` = leave the global mesh untouched), ``smoke``, ``prepack``,
-    ``capacity`` (decode slots), ``max_len`` (per-slot KV/cache budget),
-    ``seed`` (param init).  ``build()`` performs the whole setup that
-    serve.py/plan.py used to duplicate — config resolution, param init,
-    weight-stationary int8 prepack, mesh layout — and returns a ready
-    ``EpimEngine`` (with ``.cfg/.params/.packed/.serve_params/.mesh/
-    .prompt_key/.sample_key`` exposed for one-shot callers).
+    ``capacity`` (decode slots), ``max_len`` (per-request token budget),
+    ``page_size`` / ``kv_pages`` (block-paged KV pool geometry; 0 page
+    size = dense per-slot blocks), ``prefill_chunk`` (chunked-prefill
+    granularity; 0 = whole-prompt prefill), ``seed`` (param init).
+    ``build()`` performs the whole setup that serve.py/plan.py used to
+    duplicate — config resolution, param init, weight-stationary int8
+    prepack, mesh layout — and returns a ready ``EpimEngine`` (with
+    ``.cfg/.params/.packed/.serve_params/.mesh/.prompt_key/.sample_key``
+    exposed for one-shot callers).
 
 ``EpimEngine``
-    ``submit(request) -> RequestHandle`` admits the request when a slot
-    is free (prefill runs immediately — prefill/decode disaggregation:
-    the prompt is its own dispatch, never batched into the decode step);
-    ``step()`` runs ONE batched decode step over every active slot and
-    returns how many tokens were emitted; ``drain()`` steps until idle
-    and returns every completion in submission order.  ``stats`` counts
-    ``prefill_traces`` / ``slot_reuses`` / ``decode_steps`` /
-    ``completed`` / ``admitted``.
+    ``submit(request) -> RequestHandle`` validates the request (length
+    vs ``max_len``, token ids vs the vocab, page feasibility) and admits
+    it when a slot AND its KV pages are free; ``step()`` runs at most one
+    prefill chunk plus ONE batched decode step over every active slot
+    and returns how many tokens were emitted; ``drain()`` steps until
+    idle and returns every completion in submission order.  ``stats``
+    counts ``prefill_traces`` / ``prefill_chunks`` / ``slot_reuses`` /
+    ``decode_steps`` / ``completed`` / ``admitted``, plus occupancy:
+    ``queue_depth``, ``slot_hwm``, and the pool's ``pages_total`` /
+    ``pages_used`` / ``pages_free`` / ``pages_hwm`` / ``page_reuses``.
 
 Scheduling model
 ----------------
-The engine owns ONE pooled decode-state tree (``lm.init_state_pool``)
-whose batch axis is ``capacity`` request slots — dense recurrent state
-per slot for the SSM/RWKV blocks, a block of ``max_len`` KV rows per
-slot for attention.  A free-list hands slots out; a finished request
-frees its slot mid-flight and the next pending request scatters a fresh
-prefill state over it (``lm.scatter_slot_state``).  Decode runs at the
-full pool width with per-slot positions (``pos (C,)``) — freed/idle
-slots compute garbage in their own rows, which per-row independence
-keeps away from live requests and the next admission overwrites.
+The engine owns ONE pooled decode-state abstraction
+(``models/kv_pool.SlotStatePool``) whose batch axis is ``capacity``
+request slots — dense recurrent rows per slot for the SSM/RWKV blocks,
+and a *block-paged* KV pool for attention: a global pool of
+``kv_pages`` fixed-size pages (``page_size`` tokens each) plus a
+per-slot page table the jitted decode gathers K/V through.  Admission
+reserves every page the request will ever need
+(ceil((P + max_new_tokens) / page_size)) so decode can never starve
+mid-flight; when the pool is dry the queue head *defers* (FIFO
+head-of-line) until a completion frees pages.  Sizing ``kv_pages``
+below ``capacity * pages_per_slot`` oversubscribes the pool — more
+tokens of capacity per byte, the same move the paper makes for weights.
+A free-list hands slots out; a finished request frees its slot and
+pages mid-flight and the next pending request scatters a fresh prefill
+state over it (``SlotStatePool.scatter``).  Decode runs at the full
+pool width with per-slot positions (``pos (C,)``) — freed/idle slots
+compute garbage in their own rows (and write it to the pool's trash
+page), which per-row independence and the attention-side masking keep
+away from live requests.
+
+Chunked prefill
+---------------
+Prompts longer than ``prefill_chunk`` no longer prefill whole inside
+``step()``: the engine runs ONE chunk per step (first chunk at
+admission), interleaved with the batched decode tick, so a long-prompt
+arrival bounds its decode stall at one chunk instead of one prompt.
+The chunk length is rounded up to ``models/ssm.recurrence_alignment``
+(the lcm of the rwkv/mamba internal scan windows present) so chunk
+boundaries coincide with the windows the one-shot prefill already uses
+internally — that alignment is what keeps chunked recurrences
+bit-identical.  The transient chunk state carries attention K/V in
+float32 so later chunks attend earlier chunks' K/V at exactly the
+precision the one-shot path attends them fresh (the final scatter into
+the pool rounds to cache dtype, exactly where the one-shot path
+rounds).  Short prompts (P <= chunk) keep the immediate bucketed
+one-shot prefill.  Exceptions that prefill whole-prompt: MoE arches
+(capacity routing couples every token in the dispatch) and int8 KV
+caches (chunk 2 would attend dequantized rows where one-shot attends
+fresh float K/V).
 
 Prompt bucketing
 ----------------
-Prefill pads prompts up to power-of-two buckets (min 8, capped at
-``max_len``) so distinct prompt lengths reuse one compiled program per
-bucket — retraces are bounded by the number of buckets, not the number
-of lengths.  Pads sit strictly AFTER the real tokens and every mixer
-masks them to exact zeros / exact identities (``valid_len`` threading in
-models/*), so the bucketed prefill is bit-identical to an unpadded
-prefill of the same prompt.  MoE architectures are the one exception:
-capacity-based expert routing couples every token in the batch — pad
-tokens would consume expert-queue ranks — so MoE prompts prefill at
-exact length (one trace per distinct length, documented trade-off).
+One-shot prefills pad prompts up to power-of-two buckets (min 8,
+capped at the pool sequence length) so distinct prompt lengths reuse
+one compiled program per bucket; chunked prefills compile ONE program
+per (cfg, chunk) regardless of prompt length.  Pads sit strictly AFTER
+the real tokens and every mixer masks them to exact zeros / exact
+identities (``valid_len`` threading in models/*).  MoE architectures
+prefill at exact length (one trace per distinct length, documented
+trade-off).
 
 Bit-exactness contract
 ----------------------
 For any single request the engine's output is bit-identical to the
 pre-existing one-shot path (``serve.generate`` with the same ``max_len``
 and ``key=jax.random.PRNGKey(request.seed)``), greedy and sampled,
-single-device and sharded: right-padded masked prefill keeps real-token
-bits; decode rows are independent so batch width doesn't perturb a
-request; and ``jax.random.categorical`` over a ``(V,)`` row draws the
-same bits as over ``(1, V)`` (flat threefry counter reshape).
+single-device and sharded — with paging on or off, chunked or whole
+prefill: right-padded masked prefill keeps real-token bits; chunk
+boundaries sit on recurrence-window boundaries; paged attention gathers
+the same rows dense attention reads in place; decode rows are
+independent so batch width doesn't perturb a request; and
+``jax.random.categorical`` over a ``(V,)`` row draws the same bits as
+over ``(1, V)`` (flat threefry counter reshape).
 """
 from __future__ import annotations
 
@@ -95,11 +134,16 @@ import numpy as np
 from ..configs import get_config, get_smoke_config
 from ..models import lm
 from ..models.common import set_mesh
+from ..models.kv_pool import SlotStatePool, paged_leaf_paths
+from ..models.ssm import recurrence_alignment
 from .mesh import make_host_mesh, mesh_for_plan, parse_mesh
 
-# Python-side counter bumped inside the jitted prefill body: it only fires
-# when XLA (re)traces, so the delta since engine construction counts
-# compiled prefill programs — the bucketing test pins it.
+# Python-side counter bumped inside the jitted prefill bodies: it only
+# fires when XLA (re)traces, so deltas count compiled prefill programs.
+# The module hook exists for the trace-bound tests; engines attribute
+# deltas around their OWN prefill calls to a per-engine counter
+# (stats["prefill_traces"]), so two engines in one process no longer
+# corrupt each other's numbers.
 PREFILL_TRACES = [0]
 
 
@@ -127,11 +171,13 @@ class Completion:
     tokens: Tuple[int, ...]        # generated ids only (prompt excluded)
     ttft_s: float                  # submit -> first token
     latency_s: float               # submit -> last token
+    queue_wait_s: float = 0.0      # submit -> admission (slot + pages free)
+    token_times: Tuple[float, ...] = ()  # perf_counter stamp per token
 
 
 class _Record:
     __slots__ = ("rid", "request", "tokens", "submit_t", "first_tok_t",
-                 "completion", "slot")
+                 "completion", "slot", "queue_wait", "token_times")
 
     def __init__(self, rid: int, request: Request, submit_t: float):
         self.rid, self.request, self.submit_t = rid, request, submit_t
@@ -139,6 +185,8 @@ class _Record:
         self.first_tok_t = 0.0
         self.completion: Optional[Completion] = None
         self.slot: Optional[int] = None
+        self.queue_wait = 0.0
+        self.token_times: List[float] = []
 
 
 class RequestHandle:
@@ -161,8 +209,19 @@ class RequestHandle:
         return self._rec.completion
 
 
+class _PrefillJob:
+    """A multi-chunk prefill in flight: the request's slot and pages are
+    reserved, its transient batch-1 state accumulates one chunk per
+    engine step, and activation (scatter into the pool + first-token
+    sample) happens when the last chunk lands."""
+    __slots__ = ("rec", "state", "done")
+
+    def __init__(self, rec: _Record, state):
+        self.rec, self.state, self.done = rec, state, 0
+
+
 # ---------------------------------------------------------------------------
-# Jitted kernels: per-row sampling, bucketed prefill, pooled decode
+# Jitted kernels: per-row sampling, bucketed/chunked prefill, pooled decode
 # ---------------------------------------------------------------------------
 def sample_logits(logits: jax.Array) -> jax.Array:
     """Prepare logits for sampling: float32, constrained replicated.
@@ -207,17 +266,48 @@ def _prefill_one(params, prompt, valid_len, key, temp, *, cfg, max_len):
     return tok, key, state
 
 
-@jax.jit
-def _scatter(pool, one, slot):
-    return lm.scatter_slot_state(pool, one, slot)
+@functools.partial(jax.jit, static_argnames=("cfg", "seq_len"))
+def _fresh_chunk_state(*, cfg, seq_len):
+    """Transient batch-1 state for a chunked prefill, with attention K/V
+    held in float32: chunk j must attend chunks < j at exactly the
+    precision the one-shot prefill attends its fresh (pre-cache) K/V.
+    The activation scatter rounds to the pool's cache dtype — the same
+    single rounding the one-shot path applies when it writes its cache."""
+    state = lm.init_decode_state(cfg, 1, seq_len)
+    kv = paged_leaf_paths(cfg)
+    return {lk: {k: (v.astype(jnp.float32)
+                     if f"{lk}/{k}" in kv and v.dtype != jnp.int8 else v)
+                 for k, v in layer.items()}
+            for lk, layer in state.items()}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _decode_batch(params, pool, tok, pos, keys, temps, *, cfg):
+def _prefill_chunk(params, tokens, state, chunk_start, valid_len, *, cfg):
+    """One prefill chunk against the carried transient state.  chunk_start
+    and valid_len are traced, so ONE compiled program covers every chunk
+    of every prompt at this (cfg, chunk length)."""
+    PREFILL_TRACES[0] += 1
+    return lm.prefill(params, tokens, state, cfg, valid_len,
+                      chunk_start=chunk_start)
+
+
+@jax.jit
+def _first_token(logits, key, temp):
+    """Sample the first token from a chunked prefill's final logits —
+    the same `_sample_row(sample_logits(...))` composition _prefill_one
+    runs fused, on the same materialized values."""
+    return _sample_row(sample_logits(logits[:, -1])[0], key, temp)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_batch(params, pool, tok, pos, keys, temps, page_table, *, cfg):
     """One decode step over the whole slot pool: per-slot positions, then
-    one per-slot sampling fold.  Freed slots decode garbage in their own
-    rows only (per-row independence) — the host masks them out."""
-    logits, pool = lm.decode_step(params, pool, tok, pos, cfg)
+    one per-slot sampling fold.  With ``page_table`` the attention leaves
+    of ``pool`` are the shared block-paged pool.  Freed slots decode
+    garbage in their own rows / the trash page only (per-row independence
+    + masked attention) — the host masks their tokens out."""
+    logits, pool = lm.decode_step(params, pool, tok, pos, cfg,
+                                  page_table=page_table)
     toks, keys = _sample_rows(sample_logits(logits[:, -1]), keys, temps)
     return toks, pool, keys
 
@@ -237,6 +327,9 @@ class EngineConfig:
     prepack: bool = True
     capacity: int = 4
     max_len: int = 128
+    page_size: int = 16              # KV page tokens; 0 = dense per-slot
+    kv_pages: int = 0                # pool pages; 0 = capacity * pages/slot
+    prefill_chunk: int = 64          # chunked-prefill tokens; 0 = whole
     seed: int = 0
 
     def build(self) -> "EpimEngine":
@@ -268,7 +361,9 @@ class EngineConfig:
         if shard_mesh is not None:
             params = lm.shard_params(params, cfg, shard_mesh)
         engine = EpimEngine(cfg, packed if packed is not None else params,
-                            capacity=self.capacity, max_len=self.max_len)
+                            capacity=self.capacity, max_len=self.max_len,
+                            page_size=self.page_size, kv_pages=self.kv_pages,
+                            prefill_chunk=self.prefill_chunk)
         engine.config, engine.mesh = self, mesh
         engine.params, engine.packed = params, packed
         engine.prompt_key, engine.sample_key = prompt_key, sample_key
@@ -279,10 +374,11 @@ class EngineConfig:
 # The engine
 # ---------------------------------------------------------------------------
 class EpimEngine:
-    """Slot-scheduled continuous-batching server over one decode pool."""
+    """Slot-scheduled continuous-batching server over one paged pool."""
 
     def __init__(self, cfg, serve_params, capacity: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, page_size: int = 16,
+                 kv_pages: int = 0, prefill_chunk: int = 64):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.cfg, self.serve_params = cfg, serve_params
@@ -290,7 +386,21 @@ class EpimEngine:
         # MoE capacity routing couples every batch row (pad tokens would
         # consume expert-queue ranks), so MoE prompts prefill exact-length
         self.bucket_prompts = "moe" not in cfg.ffn_pattern
-        self._pool = lm.init_state_pool(cfg, capacity, max_len)
+        self._pool = SlotStatePool(cfg, capacity, max_len,
+                                   page_size=page_size, kv_pages=kv_pages)
+        self.seq_len = self._pool.seq_len   # static prefill/decode KV rows
+        # chunked prefill: aligned to the recurrence windows so chunk
+        # boundaries are one-shot window boundaries (bit-exactness); off
+        # for MoE (token coupling) and int8 caches (chunk 2 would attend
+        # dequantized rows the one-shot path attends fresh)
+        if prefill_chunk > 0 and self.bucket_prompts \
+                and cfg.kv_cache_bits != 8:
+            align = recurrence_alignment(cfg)
+            self.chunk = -(-prefill_chunk // align) * align
+        else:
+            self.chunk = 0
+        self._prefilling: Optional[_PrefillJob] = None
+        self._chunks_left = 0            # per-step()/submit() chunk budget
         self._tok = np.zeros((capacity, 1), np.int32)
         self._key = np.zeros((capacity, 2), np.uint32)
         self._pos = np.zeros((capacity,), np.int32)
@@ -301,9 +411,10 @@ class EpimEngine:
         self._pending: deque = deque()
         self._records: List[_Record] = []
         self._next_id = itertools.count()
-        self._trace_base = PREFILL_TRACES[0]
+        self._slot_hwm = 0
         self._stats = {"slot_reuses": 0, "decode_steps": 0,
-                       "completed": 0, "admitted": 0}
+                       "completed": 0, "admitted": 0,
+                       "prefill_traces": 0, "prefill_chunks": 0}
         # set by EngineConfig.build (None for a bare-constructed engine)
         self.config: Optional[EngineConfig] = None
         self.mesh = None
@@ -317,33 +428,56 @@ class EpimEngine:
             raise ValueError("empty prompt")
         if request.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if not self.cfg.embed_inputs:
+            bad = next((t for t in request.prompt
+                        if not 0 <= t < self.cfg.vocab), None)
+            if bad is not None:
+                raise ValueError(f"prompt token id {bad} outside the "
+                                 f"vocabulary [0, {self.cfg.vocab})")
+        if P > self.max_len:
+            raise ValueError(f"prompt length {P} exceeds the engine's "
+                             f"max_len budget ({self.max_len})")
         if P + request.max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt ({P}) + max_new_tokens ({request.max_new_tokens}) "
                 f"exceeds the engine's max_len ({self.max_len})")
+        need = self._pool.pages_needed(P + request.max_new_tokens)
+        if self._pool.paged and need > self._pool.page.num_pages:
+            raise ValueError(
+                f"request needs {need} KV pages but the pool holds only "
+                f"{self._pool.page.num_pages} (kv_pages) — it could never "
+                "be admitted")
         rec = _Record(next(self._next_id), request, time.perf_counter())
         self._records.append(rec)
         self._pending.append(rec)
+        self._chunks_left = 1
         self._admit_all()
         return RequestHandle(rec)
 
     def step(self) -> int:
-        """One batched decode step over every active slot.  Returns the
-        number of tokens emitted (0 = nothing active)."""
+        """At most one prefill chunk, then ONE batched decode step over
+        every active slot.  Returns the number of decode tokens emitted
+        (0 = nothing active)."""
+        self._chunks_left = 1
+        if self._prefilling is not None:
+            self._advance_prefill()
         self._admit_all()
         if not self._active:
             return 0
-        toks, self._pool, keys = _decode_batch(
-            self.serve_params, self._pool, jnp.asarray(self._tok),
+        toks, tree, keys = _decode_batch(
+            self.serve_params, self._pool.tree, jnp.asarray(self._tok),
             jnp.asarray(self._pos), jnp.asarray(self._key),
-            jnp.asarray(self._temp), cfg=self.cfg)
+            jnp.asarray(self._temp), self._pool.page_table, cfg=self.cfg)
+        self._pool.tree = tree
         toks = np.asarray(jax.device_get(toks))
         self._key = np.array(jax.device_get(keys))
         self._stats["decode_steps"] += 1
+        now = time.perf_counter()
         emitted = 0
         for slot, rec in list(self._active.items()):
             tok = int(toks[slot])
             rec.tokens.append(tok)
+            rec.token_times.append(now)
             self._tok[slot, 0] = tok
             self._pos[slot] += 1
             emitted += 1
@@ -352,9 +486,9 @@ class EpimEngine:
         return emitted
 
     def drain(self) -> List[Completion]:
-        """Step until no request is pending or active; return every
-        completion this engine has produced, in submission order."""
-        while self._pending or self._active:
+        """Step until no request is pending, prefilling, or active; return
+        every completion this engine has produced, in submission order."""
+        while self._pending or self._active or self._prefilling:
             self.step()
         return [r.completion for r in self._records
                 if r.completion is not None]
@@ -362,7 +496,9 @@ class EpimEngine:
     @property
     def stats(self) -> Dict[str, int]:
         return {**self._stats,
-                "prefill_traces": PREFILL_TRACES[0] - self._trace_base}
+                "queue_depth": len(self._pending),
+                "slot_hwm": self._slot_hwm,
+                **self._pool.stats()}
 
     @property
     def n_active(self) -> int:
@@ -376,32 +512,92 @@ class EpimEngine:
     def _bucket(self, P: int) -> int:
         if not self.bucket_prompts:
             return P
-        return min(max(8, 1 << (P - 1).bit_length()), self.max_len)
+        return min(max(8, 1 << (P - 1).bit_length()), self.seq_len)
+
+    def _needs_chunking(self, P: int) -> bool:
+        return bool(self.chunk) and P > self.chunk
 
     def _admit_all(self) -> None:
-        while self._pending and self._free:
-            self._admit(self._pending.popleft())
+        # FIFO with head-of-line blocking: a deferred head (pages dry, or
+        # an in-flight chunked prefill) holds everything behind it, which
+        # keeps admission order — and therefore slot/page assignment —
+        # a pure function of submission order.
+        while self._pending and self._free and self._prefilling is None:
+            rec = self._pending[0]
+            req = rec.request
+            if not self._pool.can_admit(len(req.prompt)
+                                        + req.max_new_tokens):
+                break                      # defer until pages free up
+            if self._needs_chunking(len(req.prompt)) \
+                    and self._chunks_left <= 0:
+                break                      # chunk budget spent this step
+            self._pending.popleft()
+            self._admit(rec)
 
     def _admit(self, rec: _Record) -> None:
         slot = self._free.pop()
         self._stats["slot_reuses"] += slot in self._used
         self._used.add(slot)
+        rec.slot = slot
+        self._slot_hwm = max(self._slot_hwm, self.capacity - len(self._free))
         req = rec.request
         P = len(req.prompt)
+        self._pool.alloc(slot, P + req.max_new_tokens)
+        rec.queue_wait = time.perf_counter() - rec.submit_t
+        if self._needs_chunking(P):
+            state = _fresh_chunk_state(cfg=self.cfg, seq_len=self.seq_len)
+            self._prefilling = _PrefillJob(rec, state)
+            self._advance_prefill()
+            return
         L = self._bucket(P)
         prompt = np.zeros((1, L), np.int32)
         prompt[0, :P] = req.prompt
+        base = PREFILL_TRACES[0]
         tok, key, state = _prefill_one(
             self.serve_params, jnp.asarray(prompt), jnp.int32(P),
             jax.random.PRNGKey(req.seed), jnp.float32(req.temperature),
-            cfg=self.cfg, max_len=self.max_len)
-        self._pool = _scatter(self._pool, state, jnp.int32(slot))
+            cfg=self.cfg, max_len=self.seq_len)
+        self._stats["prefill_traces"] += PREFILL_TRACES[0] - base
+        self._activate(rec, state, tok, key)
+
+    def _advance_prefill(self) -> None:
+        """Run ONE chunk of the in-flight chunked prefill (if any and if
+        this step's chunk budget allows)."""
+        job = self._prefilling
+        if job is None or self._chunks_left <= 0:
+            return
+        self._chunks_left -= 1
+        req = job.rec.request
+        P = len(req.prompt)
+        lo = job.done
+        n = min(self.chunk, P - lo)
+        buf = np.zeros((1, self.chunk), np.int32)
+        buf[0, :n] = req.prompt[lo:lo + n]
+        base = PREFILL_TRACES[0]
+        logits, job.state = _prefill_chunk(
+            self.serve_params, jnp.asarray(buf), job.state, jnp.int32(lo),
+            jnp.int32(n), cfg=self.cfg)
+        self._stats["prefill_traces"] += PREFILL_TRACES[0] - base
+        self._stats["prefill_chunks"] += 1
+        job.done = lo + n
+        if job.done >= P:
+            tok, key = _first_token(logits, jax.random.PRNGKey(req.seed),
+                                    jnp.float32(req.temperature))
+            self._prefilling = None
+            self._activate(job.rec, job.state, tok, key)
+
+    def _activate(self, rec: _Record, state, tok, key) -> None:
+        """Scatter a finished prefill into the pool and go live."""
+        slot = rec.slot
+        req = rec.request
+        self._pool.scatter(slot, state)
         rec.tokens.append(int(jax.device_get(tok)))
-        rec.first_tok_t = time.perf_counter()
-        rec.slot = slot
+        now = time.perf_counter()
+        rec.first_tok_t = now
+        rec.token_times.append(now)
         self._tok[slot, 0] = rec.tokens[0]
         self._key[slot] = np.asarray(jax.device_get(key))
-        self._pos[slot] = P
+        self._pos[slot] = len(req.prompt)
         self._temp[slot] = req.temperature
         self._stats["admitted"] += 1
         if req.max_new_tokens == 1:
@@ -414,7 +610,10 @@ class EpimEngine:
         rec.completion = Completion(
             request_id=rec.rid, prompt_len=len(rec.request.prompt),
             tokens=tuple(rec.tokens), ttft_s=rec.first_tok_t - rec.submit_t,
-            latency_s=now - rec.submit_t)
+            latency_s=now - rec.submit_t, queue_wait_s=rec.queue_wait,
+            token_times=tuple(rec.token_times))
         self._active.pop(rec.slot, None)
         self._free.append(rec.slot)
+        self._pool.free(rec.slot)
+        self._pos[rec.slot] = 0
         self._stats["completed"] += 1

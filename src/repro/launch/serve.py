@@ -146,6 +146,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="also serve the prompts through the "
                          "continuous-batching EpimEngine (one request per "
                          "prompt) and report TTFT + agreement")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV pool page size in tokens for the engine's "
+                         "attention caches (0 = dense per-slot blocks)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="total KV pool pages (0 = capacity * pages/slot; "
+                         "smaller oversubscribes and defers admissions)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="engine prefill chunk in tokens, rounded up to "
+                         "the arch's recurrence alignment (0 = whole-"
+                         "prompt prefill)")
     return ap
 
 
@@ -160,7 +170,8 @@ def main():
     engine = EngineConfig(
         arch=args.arch, epitome=args.epitome, plan=args.plan or None,
         mesh=args.mesh, smoke=args.smoke, capacity=n_req, max_len=max_len,
-        seed=args.seed).build()
+        page_size=args.page_size, kv_pages=args.kv_pages,
+        prefill_chunk=args.prefill_chunk, seed=args.seed).build()
     cfg, packed = engine.cfg, engine.packed
     served = engine.serve_params
     # the mesh that actually runs (make_host_mesh clamps to the device
@@ -196,10 +207,13 @@ def main():
                                   seed=args.seed))
         comps = engine.drain()
         ttfts = sorted(c.ttft_s for c in comps)
+        st = engine.stats
         line = (f"[serve] engine: completed={len(comps)} "
                 f"p50_ttft={ttfts[len(ttfts) // 2] * 1e3:.1f}ms "
-                f"steps={engine.stats['decode_steps']} "
-                f"prefill_traces={engine.stats['prefill_traces']}")
+                f"steps={st['decode_steps']} "
+                f"prefill_traces={st['prefill_traces']} "
+                f"prefill_chunks={st['prefill_chunks']} "
+                f"pages_hwm={st['pages_hwm']}/{st['pages_total']}")
         if args.temperature == 0.0:
             # greedy: the engine rows must reproduce the one-shot batch
             ref = jax.device_get(toks)

@@ -185,8 +185,60 @@ def kv_cache_spec(batch_axes, seq_axes):
     return P(None, batch_axes, seq_axes, None, None)
 
 
+def chunked_prefill_attention(params: dict, x: Array, cache: dict,
+                              chunk_start: Array, cfg: ModelConfig, *,
+                              local: bool = False, valid_len=None,
+                              prefix: str = "") -> Tuple[Array, dict]:
+    """One prefill *chunk* against a running dense cache.
+
+    x: (B, C, d) — the chunk's embeddings; cache k/v: (B, Smax, Hkv, hd)
+    holding every earlier chunk's K/V; chunk_start: traced scalar row
+    offset of this chunk.  Writes the chunk's K/V at chunk_start and
+    attends the chunk's queries over the whole cache with the same
+    online-softmax kernel the one-shot path uses (q_offset carries the
+    causal mask; rows beyond chunk_start + C are exact zeros from the
+    fresh cache, masked to exact-zero probability).  Bit-identical to the
+    one-shot prefill for Smax <= attn_kv_chunk (one KV chunk — the smoke
+    and CI regime); beyond that the two paths tile the online softmax at
+    different boundaries.  Requires a float cache (the engine disables
+    chunking for kv_cache_bits=8: re-reading dequantized int8 rows in
+    chunk 2 would not be bit-identical to one-shot's fresh fp K/V).
+
+    Pad rows of a final partial chunk (valid_len < C) need no masking
+    here: their outputs are discarded, and their garbage K/V rows sit at
+    positions the causal mask hides until sequential decode overwrites
+    them — exactly the bucketed one-shot path's pad-row mechanism.
+    """
+    if cfg.kv_cache_bits == 8:
+        raise NotImplementedError(
+            "chunked prefill requires a float KV cache (kv_cache_bits=16)")
+    B, C, d = x.shape
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    Smax = cache["k"].shape[1]
+    positions = chunk_start + jnp.arange(C)
+    q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd, _nm(prefix, "wq"))).reshape(B, C, nq, hd)
+    k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wk"))).reshape(B, C, nkv, hd)
+    v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wv"))).reshape(B, C, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, BATCH_AXES, None, TENSOR_AXIS, None)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), chunk_start, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), chunk_start, 1)
+    window = cfg.window if local else None
+    o = _chunk_attn(q, cache["k"], cache["v"], chunk_start,
+                    min(cfg.attn_kv_chunk, Smax), True, window,
+                    cfg.attn_softcap)
+    o = o.reshape(B, C, nq * hd)
+    out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d, _nm(prefix, "wo")))
+    return out, cache
+
+
 def decode_attention(params: dict, x: Array, cache: dict,
                      pos: Array, cfg: ModelConfig, *, local: bool = False,
+                     page_table: Optional[Array] = None,
                      prefix: str = "") -> Tuple[Array, dict]:
     """One decode step.  x: (B, 1, d); cache: {k, v[, k_s, v_s]} with
     k/v (B, Smax, Hkv, hd); pos: scalar int32 write index, or a (B,)
@@ -194,12 +246,32 @@ def decode_attention(params: dict, x: Array, cache: dict,
     the engine's state pool decodes at its own position).  Per-row values
     are bit-identical to the scalar path at the same position — the
     vector form only changes where cache rows are written and how the
-    causal mask broadcasts.  Returns (out, new cache)."""
+    causal mask broadcasts.  Returns (out, new cache).
+
+    page_table — block-paged mode (requires per-row pos): cache k/v are a
+    global page pool (num_pages + trash, page_size, Hkv, hd) shared by
+    all slots, and page_table (B, pages_per_slot) maps each row's logical
+    pages to physical ones.  The step's K/V lands at the physical row
+    pos // page_size resolves to; attention gathers each row's pages back
+    into a dense (B, Lg, Hkv, hd) view and proceeds exactly as the dense
+    path — same mask, same softmax, same einsums — so paged values are
+    bit-identical to dense at equal gathered length.  Rows gathered from
+    the trash page (unmapped entries) may hold other slots' garbage; the
+    causal mask turns them into exact-zero probabilities, and vc is
+    zeroed under the mask so even NaN garbage cannot poison the output
+    (0 * NaN is NaN; where(mask, ·, 0) is not)."""
     B, _, d = x.shape
     hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     G = nq // nkv
-    Smax = cache["k"].shape[1]
     per_row = jnp.ndim(pos) == 1                   # (B,) per-slot positions
+    paged = page_table is not None
+    if paged:
+        if not per_row:
+            raise ValueError("page_table requires per-row (B,) positions")
+        page = cache["k"].shape[1]
+        Smax = page_table.shape[1] * page          # gathered rows per slot
+    else:
+        Smax = cache["k"].shape[1]
     q = apply_linear(params["wq"], x, cfg.ep(d, nq * hd, _nm(prefix, "wq"))).reshape(B, 1, nq, hd)
     k = apply_linear(params["wk"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wk"))).reshape(B, 1, nkv, hd)
     v = apply_linear(params["wv"], x, cfg.ep(d, nkv * hd, _nm(prefix, "wv"))).reshape(B, 1, nkv, hd)
@@ -208,40 +280,53 @@ def decode_attention(params: dict, x: Array, cache: dict,
     q = apply_rope(q, posv, cfg.rope_theta)
     k = apply_rope(k, posv, cfg.rope_theta)
     cache = dict(cache)
-    if per_row:
+    if paged:
+        # physical row of each slot's current token, then one flat scatter
+        phys = jnp.take_along_axis(page_table, (pos // page)[:, None], 1)[:, 0]
+        flat = phys * page + pos % page                          # (B,)
+        upd = lambda c, t: c.reshape((-1,) + c.shape[2:]).at[flat].set(
+            t[:, 0].astype(c.dtype)).reshape(c.shape)
+        full = lambda c: c[page_table].reshape((B, Smax) + c.shape[2:])
+    elif per_row:
         upd = lambda c, t: jax.vmap(
             lambda cb, tb, pb: jax.lax.dynamic_update_slice_in_dim(
                 cb, tb.astype(cb.dtype), pb, 0))(c, t, pos)
+        full = lambda c: c
     else:
         upd = lambda c, t: jax.lax.dynamic_update_slice_in_dim(
             c, t.astype(c.dtype), pos, 1)
+        full = lambda c: c
     if cfg.kv_cache_bits == 8:
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
         cache["k"], cache["k_s"] = upd(cache["k"], kq), upd(cache["k_s"], ks)
         cache["v"], cache["v_s"] = upd(cache["v"], vq), upd(cache["v_s"], vs)
-        kc = dequantize_kv(cache["k"], cache["k_s"], jnp.float32)
-        vc = dequantize_kv(cache["v"], cache["v_s"], jnp.float32)
+        kc = dequantize_kv(full(cache["k"]), full(cache["k_s"]), jnp.float32)
+        vc = dequantize_kv(full(cache["v"]), full(cache["v_s"]), jnp.float32)
     else:
         cache["k"] = upd(cache["k"], k)
         cache["v"] = upd(cache["v"], v)
-        kc = cache["k"].astype(jnp.float32)
-        vc = cache["v"].astype(jnp.float32)
+        kc = full(cache["k"]).astype(jnp.float32)
+        vc = full(cache["v"]).astype(jnp.float32)
 
     qg = q.reshape(B, nkv, G, hd).astype(jnp.float32)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, kc) / math.sqrt(hd)
     s = softcap(s, cfg.attn_softcap)
     kv_pos = jnp.arange(Smax)
     if per_row:
-        mask = kv_pos[None, :] <= pos[:, None]             # (B, Smax)
+        rmask = kv_pos[None, :] <= pos[:, None]            # (B, Smax)
         if local and cfg.window:
-            mask = mask & (kv_pos[None, :] > pos[:, None] - cfg.window)
-        mask = mask[:, None, None, :]
+            rmask = rmask & (kv_pos[None, :] > pos[:, None] - cfg.window)
+        mask = rmask[:, None, None, :]
     else:
-        mask = kv_pos <= pos
+        rmask = kv_pos[None, :] <= pos
         if local and cfg.window:
-            mask = mask & (kv_pos > pos - cfg.window)
-        mask = mask[None, None, None, :]
+            rmask = rmask & (kv_pos[None, :] > pos - cfg.window)
+        mask = rmask[:, None, None, :]
+    # masked rows get exact-zero probability via exp underflow at NEG_INF,
+    # but 0 * NaN = NaN: zero vc under the mask so garbage rows (trash
+    # page, freed-slot scribbles) can never reach the output
+    vc = jnp.where(rmask[..., None, None], vc, 0.0)
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, vc)

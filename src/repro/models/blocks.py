@@ -10,7 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core.layers import apply_linear, init_linear
-from .attention import attention, decode_attention, init_attn
+from .attention import (
+    attention, chunked_prefill_attention, decode_attention, init_attn,
+)
 from .common import act_fn, init_rms_norm, rms_norm, shard, BATCH_AXES, TENSOR_AXIS
 from .config import LayerKind, ModelConfig, layer_name as _nm
 from .moe import init_moe, moe_ffn
@@ -113,7 +115,8 @@ def apply_group(params: Dict[str, Any], x: Array, cfg: ModelConfig,
 
 def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
                   cfg: ModelConfig, positions: Optional[Array] = None,
-                  valid_len: Optional[Array] = None
+                  valid_len: Optional[Array] = None,
+                  chunk_start: Optional[Array] = None
                   ) -> Tuple[Array, Dict[str, Any]]:
     """Full-sequence forward that also fills the decode state (KV caches are
     written into the pre-allocated max_len buffers of ``state``).
@@ -124,14 +127,34 @@ def prefill_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
     exactly as it stood after the last real token; attention needs no
     masking — pad K/V beyond ``valid_len - 1`` are causally invisible to
     real queries and get overwritten by decode steps before any mask ever
-    reaches them."""
+    reaches them.
+
+    ``chunk_start`` (traced scalar) marks a *chunked* prefill: x is one
+    chunk of the prompt starting at that sequence offset, and ``state``
+    carries everything earlier chunks built (KV rows below chunk_start,
+    SSM recurrent state after the last earlier token).  Attention layers
+    route through chunked_prefill_attention (write at chunk_start, attend
+    over the running cache); the SSM mixers need no routing — the carried
+    state is their whole past, and ``valid_len`` masking already makes a
+    padded final chunk match the one-shot path's internal zero-padded
+    windows (launch/engine.py aligns the chunk size to rwkv_chunk /
+    mamba_chunk so chunk boundaries coincide with the one-shot scan's own
+    window boundaries — that alignment, not this function, is what makes
+    chunked recurrences bit-identical)."""
     for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
         layer = params[f"L{i}"]
         st = state[f"L{i}"]
         ns = dict(st)
         mixer_p, ffn_p = f"L{i}/mixer", f"L{i}/ffn"
         h = rms_norm(x, layer["norm1"], cfg.norm_eps)
-        if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
+        if (kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value)
+                and chunk_start is not None):
+            mix, new_cache = chunked_prefill_attention(
+                layer["mixer"], h, {"k": st["k"], "v": st["v"]}, chunk_start,
+                cfg, local=(kind == LayerKind.ATTN_LOCAL.value),
+                valid_len=valid_len, prefix=mixer_p)
+            ns.update(new_cache)
+        elif kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
             mix, (k, v) = attention(layer["mixer"], h, cfg,
                                     local=(kind == LayerKind.ATTN_LOCAL.value),
                                     positions=positions, return_kv=True,
@@ -201,9 +224,15 @@ def init_group_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, An
 
 
 def decode_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
-                 pos: Array, cfg: ModelConfig
+                 pos: Array, cfg: ModelConfig,
+                 page_table: Optional[Array] = None
                  ) -> Tuple[Array, Dict[str, Any]]:
-    """x: (B, 1, d).  Returns (x, new_state)."""
+    """x: (B, 1, d).  Returns (x, new_state).
+
+    ``page_table`` (B, pages_per_slot): the attention layers' k/v state
+    leaves are a shared block-paged pool (models/kv_pool.py) rather than
+    per-row dense caches; decode_attention reads and writes through the
+    table.  SSM leaves are dense per-row either way."""
     new_state: Dict[str, Any] = {}
     for i, (kind, ffn_kind) in enumerate(cfg.full_pattern):
         layer = params[f"L{i}"]
@@ -214,7 +243,8 @@ def decode_group(params: Dict[str, Any], state: Dict[str, Any], x: Array,
         if kind in (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value):
             mix, new_cache = decode_attention(
                 layer["mixer"], h, st, pos, cfg,
-                local=(kind == LayerKind.ATTN_LOCAL.value), prefix=mixer_p)
+                local=(kind == LayerKind.ATTN_LOCAL.value),
+                page_table=page_table, prefix=mixer_p)
             ns.update(new_cache)
         elif kind == LayerKind.MAMBA.value:
             mix, (conv, hst) = mamba_mix(layer["mixer"], h, cfg,

@@ -1,0 +1,254 @@
+"""Block-paged KV pool + pooled decode state: the serving state layer.
+
+``SlotStatePool`` owns the continuous-batching engine's decode state for a
+fixed number of request *slots*.  Two kinds of leaves live behind one
+interface:
+
+dense per-slot rows
+    Recurrent state (RWKV ``x_prev``/``s``, Mamba ``conv``/``h``) is a
+    fixed-size row per slot regardless of sequence length — axis 1 of the
+    leaf is the slot id, exactly the PR-6 geometry.
+
+block-paged KV
+    Attention K/V (and the int8-cache scale grids) are paged: one global
+    pool of ``num_pages`` fixed-size pages of ``page_size`` tokens each,
+    plus a per-slot *page table* mapping the slot's logical pages to
+    physical pages.  A slot holding a 40-token sequence pins
+    ``ceil(40 / page_size)`` pages instead of a dense ``max_len`` block —
+    the pool can therefore be sized *below* ``capacity * max_len``
+    (oversubscription) and admission defers when no pages are free, the
+    same way epitomes fit more parameters than the crossbar area would
+    dense.  Page tables are host-side numpy (the engine mutates them at
+    admission/free only) and enter the jitted decode as an ``(C, pages)``
+    int32 operand; attention gathers K/V rows through it
+    (``models.attention.decode_attention(page_table=...)``).
+
+One extra physical page — the *trash page*, index ``num_pages`` — backs
+every unmapped page-table entry: reads of unmapped pages land there (and
+are causally masked to exact zeros by attention), and garbage writes from
+freed slots scribble there instead of clobbering live pages.
+
+The pool's jitted ops (``scatter_slot`` / ``gather_slot``) move a
+single-request dense state tree (batch 1, ``seq_len`` KV rows) in and out
+of the pool: dense leaves by slot row, paged leaves page-by-page through
+the slot's table row.  Which leaves are paged is a static property of the
+config (``paged_paths``), so one compiled program serves every slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import init_group_state
+from .config import LayerKind, ModelConfig
+
+Array = jax.Array
+
+_ATTN_KINDS = (LayerKind.ATTN.value, LayerKind.ATTN_LOCAL.value)
+_KV_LEAVES = ("k", "v", "k_s", "v_s")
+
+
+def paged_leaf_paths(cfg: ModelConfig) -> frozenset:
+    """The state-tree paths ("L{i}/k", ...) that hold sequence-indexed KV
+    and therefore page; everything else stays a dense per-slot row."""
+    paths = set()
+    for i, (kind, _) in enumerate(cfg.full_pattern):
+        if kind in _ATTN_KINDS:
+            paths.update(f"L{i}/{leaf}" for leaf in _KV_LEAVES)
+    return frozenset(paths)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    """Static geometry of the paged half of the pool."""
+    page_size: int          # tokens per page
+    pages_per_slot: int     # logical pages in one slot's table row
+    num_pages: int          # physical pages (the trash page is extra)
+
+    @property
+    def seq_len(self) -> int:
+        """KV rows a fully-mapped slot addresses (>= the engine max_len)."""
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def trash(self) -> int:
+        """Physical index of the write-off page unmapped entries point at."""
+        return self.num_pages
+
+
+# ---------------------------------------------------------------------------
+# Jitted pool <-> single-request-state movement
+# ---------------------------------------------------------------------------
+def _walk(pool: Dict[str, Any], fn) -> Dict[str, Any]:
+    return {lk: {k: fn(f"{lk}/{k}", v) for k, v in layer.items()}
+            for lk, layer in pool.items()}
+
+
+@partial(jax.jit, static_argnames=("paged_paths",))
+def scatter_slot(pool, one, slot, table_row, *, paged_paths):
+    """Write a batch-1 state tree into the pool: dense leaves at slot row
+    ``slot``, paged leaves page-by-page through ``table_row`` (unmapped
+    entries write into the trash page, by construction of the table)."""
+    def write(path, p):
+        o = one[path.split("/", 1)[0]][path.split("/", 1)[1]]
+        if path in paged_paths:
+            G, _, page = p.shape[:3]
+            pages = o.astype(p.dtype).reshape((G, -1, page) + p.shape[3:])
+            return p.at[:, table_row].set(pages)
+        return jax.lax.dynamic_update_slice_in_dim(p, o.astype(p.dtype),
+                                                   slot, 1)
+    return _walk(pool, write)
+
+
+@partial(jax.jit, static_argnames=("paged_paths",))
+def gather_slot(pool, slot, table_row, *, paged_paths):
+    """Read one slot back out as a batch-1 state tree (preemption /
+    debugging mirror of ``scatter_slot``)."""
+    def read(path, p):
+        if path in paged_paths:
+            g = p[:, table_row]                       # (G, pps, page, ...)
+            return g.reshape((p.shape[0], 1, -1) + p.shape[3:])
+        return jax.lax.dynamic_slice_in_dim(p, slot, 1, 1)
+    return _walk(pool, read)
+
+
+# ---------------------------------------------------------------------------
+# The pooled-state abstraction
+# ---------------------------------------------------------------------------
+class SlotStatePool:
+    """Pooled decode state for ``capacity`` slots, block-paged KV included.
+
+    ``page_size=0`` (or an attention-free arch) degrades to the dense
+    PR-6 geometry: every leaf is a per-slot row, no page accounting, and
+    ``page_table`` is None.  ``kv_pages=0`` sizes the pool to exactly
+    ``capacity * pages_per_slot`` (no oversubscription); a smaller value
+    oversubscribes — the engine must then defer admissions when
+    ``can_admit`` says the pool is dry.
+    """
+
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int,
+                 page_size: int = 0, kv_pages: int = 0):
+        self.cfg, self.capacity, self.max_len = cfg, capacity, max_len
+        has_attn = any(kind in _ATTN_KINDS for kind, _ in cfg.full_pattern)
+        self.paged_paths = paged_leaf_paths(cfg) if (page_size and has_attn) \
+            else frozenset()
+        if self.paged_paths:
+            pps = -(-max_len // page_size)
+            self.page = PageSpec(page_size, pps,
+                                 kv_pages or capacity * pps)
+        else:
+            self.page = None
+        self.seq_len = self.page.seq_len if self.page else max_len
+        self.tree = self._init_tree()
+        # host-side page accounting (mutated at admission/free only)
+        if self.page:
+            self._table = np.full((capacity, self.page.pages_per_slot),
+                                  self.page.trash, np.int32)
+            self._free_pages: List[int] = list(range(self.page.num_pages))[::-1]
+            self._slot_pages: Dict[int, List[int]] = {}
+            self._ever_used: Set[int] = set()
+            self._pages_hwm = 0
+            self._page_reuses = 0
+        else:
+            self._table = None
+
+    def _init_tree(self) -> Dict[str, Any]:
+        one = jax.eval_shape(
+            lambda: init_group_state(self.cfg, self.capacity, self.seq_len))
+
+        def leaf(path, l):
+            if path in self.paged_paths:
+                # (C, seq_len, Hkv, w) -> (pages + trash, page_size, Hkv, w)
+                shp = (self.cfg.n_groups, self.page.num_pages + 1,
+                       self.page.page_size) + l.shape[2:]
+            else:
+                shp = (self.cfg.n_groups,) + l.shape
+            return jnp.zeros(shp, l.dtype)
+        return _walk(one, leaf)
+
+    # -- page accounting ----------------------------------------------------
+    @property
+    def paged(self) -> bool:
+        return self.page is not None
+
+    def pages_needed(self, tokens: int) -> int:
+        """Pages a request holding ``tokens`` KV rows pins for its life."""
+        if not self.page:
+            return 0
+        return -(-tokens // self.page.page_size)
+
+    def can_admit(self, tokens: int) -> bool:
+        return (not self.page
+                or self.pages_needed(tokens) <= len(self._free_pages))
+
+    def alloc(self, slot: int, tokens: int) -> None:
+        """Reserve and map every page the request will ever need (prompt +
+        max_new_tokens), so decode can cross page boundaries without host
+        intervention and can never starve mid-flight."""
+        if not self.page:
+            return
+        n = self.pages_needed(tokens)
+        if n > len(self._free_pages):
+            raise RuntimeError(
+                f"KV pool dry: slot {slot} needs {n} pages, "
+                f"{len(self._free_pages)} free (admission should defer)")
+        pages = [self._free_pages.pop() for _ in range(n)]
+        self._page_reuses += sum(p in self._ever_used for p in pages)
+        self._ever_used.update(pages)
+        self._slot_pages[slot] = pages
+        self._table[slot] = self.page.trash
+        self._table[slot, :n] = pages
+        self._pages_hwm = max(self._pages_hwm, self.pages_used)
+
+    def free(self, slot: int) -> None:
+        if not self.page:
+            return
+        for p in reversed(self._slot_pages.pop(slot, [])):
+            self._free_pages.append(p)
+        self._table[slot] = self.page.trash
+
+    @property
+    def pages_used(self) -> int:
+        return self.page.num_pages - len(self._free_pages) if self.page else 0
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free_pages) if self.page else 0
+
+    def stats(self) -> Dict[str, int]:
+        if not self.page:
+            return {"pages_total": 0, "pages_used": 0, "pages_free": 0,
+                    "pages_hwm": 0, "page_reuses": 0}
+        return {"pages_total": self.page.num_pages,
+                "pages_used": self.pages_used,
+                "pages_free": self.pages_free,
+                "pages_hwm": self._pages_hwm,
+                "page_reuses": self._page_reuses}
+
+    # -- device ops ----------------------------------------------------------
+    @property
+    def page_table(self) -> Optional[Array]:
+        """The (capacity, pages_per_slot) int32 operand the jitted decode
+        gathers KV through; None for a dense pool."""
+        return None if self._table is None else jnp.asarray(self._table)
+
+    def table_row(self, slot: int) -> Optional[Array]:
+        return None if self._table is None else jnp.asarray(self._table[slot])
+
+    def scatter(self, slot: int, one: Dict[str, Any]) -> None:
+        """Write a finished prefill's batch-1 state into ``slot``."""
+        row = (self.table_row(slot) if self._table is not None
+               else jnp.zeros((0,), jnp.int32))
+        self.tree = scatter_slot(self.tree, one, jnp.int32(slot), row,
+                                 paged_paths=self.paged_paths)
+
+    def gather(self, slot: int) -> Dict[str, Any]:
+        row = (self.table_row(slot) if self._table is not None
+               else jnp.zeros((0,), jnp.int32))
+        return gather_slot(self.tree, jnp.int32(slot), row,
+                           paged_paths=self.paged_paths)

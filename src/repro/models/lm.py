@@ -317,39 +317,23 @@ def state_specs(cfg: ModelConfig, state_shape: Dict[str, Any],
 # ---------------------------------------------------------------------------
 # Slot-pooled decode state (continuous batching; launch/engine.py)
 #
-# The engine owns ONE decode-state tree whose batch axis (axis 1, after the
-# stacked group axis) is a pool of request slots: dense fixed-size
-# recurrent state per slot for the SSM arches, and a block of max_len KV
-# rows per slot for attention arches (one contiguous block per slot,
-# free-list managed by the engine).  A finished request frees its slot and
-# the next admission scatters a fresh prefill state over it.
+# The engine owns ONE pooled decode-state abstraction — SlotStatePool in
+# models/kv_pool.py — whose batch axis (axis 1, after the stacked group
+# axis) is a pool of request slots: dense fixed-size recurrent rows per
+# slot for the SSM arches, and a *block-paged* global KV pool + per-slot
+# page table for attention arches (dense per-slot max_len blocks when
+# paging is off).  A finished request frees its slot (and pages) and the
+# next admission scatters a fresh prefill state over it.  The old
+# init_state_pool / scatter_slot_state / gather_slot_state free functions
+# are now SlotStatePool methods; the class is re-exported here so the
+# launch layer keeps importing its state interface from models.lm.
 # ---------------------------------------------------------------------------
-def init_state_pool(cfg: ModelConfig, capacity: int,
-                    max_len: int) -> Dict[str, Any]:
-    """Pooled decode state for ``capacity`` request slots.  Identical
-    geometry to ``init_decode_state`` — slot i of the pool is batch row i —
-    so the scanned decode runs on the pool unchanged."""
-    return init_decode_state(cfg, capacity, max_len)
-
-
-def scatter_slot_state(pool: Dict[str, Any], one: Dict[str, Any],
-                       slot: Array) -> Dict[str, Any]:
-    """Write a single-request state tree (batch 1) into pool slot ``slot``
-    (traced scalar — one compiled program serves every slot)."""
-    return jax.tree.map(
-        lambda p, o: jax.lax.dynamic_update_slice_in_dim(
-            p, o.astype(p.dtype), slot, 1), pool, one)
-
-
-def gather_slot_state(pool: Dict[str, Any], slot: Array) -> Dict[str, Any]:
-    """Read slot ``slot`` back out as a batch-1 state tree (preemption /
-    debugging mirror of scatter_slot_state)."""
-    return jax.tree.map(
-        lambda p: jax.lax.dynamic_slice_in_dim(p, slot, 1, 1), pool)
+from .kv_pool import SlotStatePool  # noqa: E402  (re-export; see above)
 
 
 def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
-            cfg: ModelConfig, valid_len: Optional[Array] = None
+            cfg: ModelConfig, valid_len: Optional[Array] = None,
+            chunk_start: Optional[Array] = None
             ) -> Tuple[Array, Dict[str, Any]]:
     """Run the prompt, fill decode state.  Returns (last-token logits, state).
 
@@ -359,7 +343,14 @@ def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
     ``valid_len`` tokens are real.  The returned logits are gathered at
     the last *real* token and the per-layer states are masked so pads
     never touch them — the result is bit-identical to an unpadded prefill
-    of the same prompt."""
+    of the same prompt.
+
+    ``chunk_start`` (traced scalar) makes this one *chunk* of a chunked
+    prefill: ``inputs`` is the chunk (already chunk-local), ``state``
+    carries the earlier chunks, and the chunk's rows live at sequence
+    positions chunk_start..chunk_start+C-1.  ``valid_len`` then counts the
+    real tokens *within this chunk*.  The engine calls this once per
+    chunk, interleaved with decode ticks, instead of once per prompt."""
     if inputs.ndim == 2:
         x = embed_lookup(params["embed"], inputs, cfg.cdtype)
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
@@ -369,7 +360,8 @@ def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
     def scan_fn(x, gs):
         group_params, group_state = gs
         x, new_state = prefill_group(group_params, group_state, x, cfg,
-                                     valid_len=valid_len)
+                                     valid_len=valid_len,
+                                     chunk_start=chunk_start)
         return x, new_state
 
     x, new_states = jax.lax.scan(scan_fn, x, (params["groups"], state),
@@ -383,11 +375,15 @@ def prefill(params: Dict[str, Any], inputs: Array, state: Dict[str, Any],
 
 
 def decode_step(params: Dict[str, Any], state: Dict[str, Any], token: Array,
-                pos: Array, cfg: ModelConfig
+                pos: Array, cfg: ModelConfig,
+                page_table: Optional[Array] = None
                 ) -> Tuple[Array, Dict[str, Any]]:
     """token: (B, 1) int32 (or (B, 1, d) embeddings); pos: scalar int32,
     or (B,) int32 per-row positions (continuous batching: every slot of
     the engine's state pool sits at its own sequence position).
+    ``page_table`` (B, pages_per_slot, requires per-row pos): the state's
+    attention k/v leaves are a shared block-paged pool read/written
+    through the table (models/kv_pool.py) instead of dense per-row rows.
     Returns (logits (B, 1, vocab), new state)."""
     if token.ndim == 2:
         x = embed_lookup(params["embed"], token, cfg.cdtype)
@@ -397,7 +393,8 @@ def decode_step(params: Dict[str, Any], state: Dict[str, Any], token: Array,
 
     def scan_fn(x, gs):
         group_params, group_state = gs
-        x, new_state = decode_group(group_params, group_state, x, pos, cfg)
+        x, new_state = decode_group(group_params, group_state, x, pos, cfg,
+                                    page_table=page_table)
         return x, new_state
 
     x, new_states = jax.lax.scan(scan_fn, x, (params["groups"], state),

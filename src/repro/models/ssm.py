@@ -34,6 +34,31 @@ Array = jax.Array
 UNROLL_CHUNKS = False
 
 
+def recurrence_alignment(cfg: ModelConfig) -> int:
+    """Smallest chunk granularity at which a prefill can be split without
+    changing any recurrent layer's bits (launch/engine.py chunked prefill).
+
+    Both mixers evaluate their recurrence in fixed internal windows
+    (cfg.rwkv_chunk / cfg.mamba_chunk) whose carried state crosses window
+    boundaries through non-associative fp arithmetic — exp(a)·exp(b) is
+    not exp(a+b) in fp32, and the associative-scan tree reshapes with the
+    window count.  Splitting a prompt anywhere *except* a window boundary
+    therefore changes bits.  An engine chunk that is a common multiple of
+    every recurrence window present makes each engine chunk an integer
+    number of internal windows, so the chunked evaluation performs the
+    identical sequence of window scans and state carries as the one-shot
+    prefill (a padded final chunk matches one-shot's own zero-padded last
+    window: pads contribute exact identity scan elements under valid_len
+    masking).  Attention-only stacks may split anywhere (returns 1)."""
+    align = 1
+    for kind, _ in cfg.full_pattern:
+        if kind == "mamba":
+            align = math.lcm(align, cfg.mamba_chunk)
+        elif kind == "rwkv":
+            align = math.lcm(align, cfg.rwkv_chunk)
+    return align
+
+
 # ===========================================================================
 # RWKV6
 # ===========================================================================
