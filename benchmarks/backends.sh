@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Backend matrix for the kernel benchmarks and the autotuner.
+#
+# The tuning cache is per-backend (benchmarks/tuned/<backend>.json), so the
+# same command re-tunes per lane:
+#
+#   benchmarks/backends.sh cpu       # single-process CPU, interpret-mode Pallas
+#   benchmarks/backends.sh cpu8      # 8 forced host devices (sharded lanes)
+#   benchmarks/backends.sh gpu       # CUDA backend, compiled Pallas (Triton)
+#   benchmarks/backends.sh tpu       # TPU backend, compiled Pallas (Mosaic)
+#   benchmarks/backends.sh cpu -- --only kernels   # forward extra run.py args
+#
+# On CPU the Pallas kernels run interpret mode (timings measure Python, not
+# hardware) — the autotune lane is still meaningful there as a smoke of the
+# tuning loop itself; real block-shape wins need gpu/tpu lanes.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+lane="${1:-cpu}"
+shift || true
+[ "${1:-}" = "--" ] && shift
+args=("$@")
+[ ${#args[@]} -eq 0 ] && args=(--only autotune)
+
+# allocator: page-heavy interpret-mode runs are measurably steadier under
+# tcmalloc when it is installed (same preload the serving benches use)
+for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+          /usr/lib/libtcmalloc.so.4; do
+  if [ -f "$so" ]; then
+    export LD_PRELOAD="$so"
+    break
+  fi
+done
+
+case "$lane" in
+  cpu)
+    export JAX_PLATFORMS=cpu
+    ;;
+  cpu8)
+    export JAX_PLATFORMS=cpu
+    export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8"
+    ;;
+  gpu)
+    export JAX_PLATFORMS=cuda
+    # deterministic clocks beat autotuner noise; harmless if unsupported
+    export XLA_FLAGS="${XLA_FLAGS:-} --xla_gpu_deterministic_ops=true"
+    ;;
+  tpu)
+    export JAX_PLATFORMS=tpu
+    ;;
+  *)
+    echo "unknown lane '$lane' (cpu | cpu8 | gpu | tpu)" >&2
+    exit 2
+    ;;
+esac
+
+echo "[backends] lane=$lane JAX_PLATFORMS=$JAX_PLATFORMS" \
+     "XLA_FLAGS=${XLA_FLAGS:-} LD_PRELOAD=${LD_PRELOAD:-}" >&2
+exec python -m benchmarks.run "${args[@]}"

@@ -255,6 +255,54 @@ def sharded_plan(emit) -> None:
          f"epitomized={plan.n_epitomized}/{len(plan.layers)}")
 
 
+def autotune_blocks(emit) -> None:
+    """Heuristic vs autotuned kernel blocks on the paper's shapes: three
+    ResNet-50 conv row counts (including the T = 196 / T = 49 prime grids)
+    and two LM decode projections (the fixed small-T batch the engine
+    serves).  Each row carries heuristic_us next to tuned_us — the winner
+    is min over a measured sweep that always contains the heuristic
+    candidate, so tuned_us <= heuristic_us by construction — plus the
+    winning (bt, bk, bn), whether the pipelined fused-fold variant won,
+    bit-identity vs the heuristic blocks, and max_err vs the fake-quant
+    reconstruct oracle.  The aggregate row is the CI gate."""
+    from repro.kernels.autotune import tune
+
+    # (label, spec, T) — conv rows mirror conv_quant_epitome's geometry;
+    # LM rows are decode-shaped (T = 8) attention/FFN projections
+    cases = [
+        ("conv-r50-layer3.conv2",
+         EpitomeSpec(M=2304, N=256, m=1024, n=256, bm=256, bn=256), 196),
+        ("conv-r50-layer4.conv2",
+         EpitomeSpec(M=4608, N=512, m=1024, n=256, bm=256, bn=256), 49),
+        ("conv-r50-layer4.conv1",
+         EpitomeSpec(M=2048, N=512, m=1024, n=256, bm=256, bn=256), 196),
+        ("lm-attn-proj-4096",
+         EpitomeSpec(M=4096, N=4096, m=1024, n=256, bm=256, bn=256), 8),
+        ("lm-ffn-proj-2048",
+         EpitomeSpec(M=2048, N=2048, m=512, n=256, bm=256, bn=256), 8),
+    ]
+    all_ok, all_ident, worst_err = True, True, 0.0
+    for label, spec, T in cases:
+        res = tune(spec, 3, T, grid="tiny", iters=2)
+        ok = (res.source == "heuristic"
+              or res.tuned_us <= res.heuristic_us)
+        all_ok &= ok
+        all_ident &= res.bit_identical
+        if res.max_err == res.max_err:                 # NaN-safe
+            worst_err = max(worst_err, res.max_err)
+        bt, bk, bn = res.blocks
+        emit(f"kernels/autotune-{label}-3bit", res.tuned_us,
+             f"T={T};heuristic_us={res.heuristic_us:.1f};"
+             f"tuned_us={res.tuned_us:.1f};blocks={bt}x{bk}x{bn};"
+             f"fused_fold={res.fused_fold};bit_identical={res.bit_identical};"
+             f"max_err={res.max_err:.2e};source={res.source}")
+    assert all_ok, "a tuned row regressed past its heuristic baseline"
+    assert worst_err <= 1e-4, f"tuned max_err {worst_err:.2e} > 1e-4"
+    emit("kernels/autotune-smoke", 0.0,
+         f"cases={len(cases)};tuned_le_heuristic={all_ok};"
+         f"bit_identical={all_ident};worst_err={worst_err:.2e}")
+
+
 def quant_epitome(emit) -> None:
     """The flagship fused path (int8-packed quantized epitome) against the
     execution ladder it replaces: reconstruct / wrapped / fp kernel.

@@ -9,6 +9,8 @@ Sections:
   table3   — Table 3 epitome + pruning compression
   fig4     — Figure 4 uniform vs wrapping vs evo-search vs EPIM-Opt
   kernels  — epitome matmul mode timings + Pallas interpret checks
+  autotune — heuristic vs measured-winner kernel blocks (tuned_us <=
+             heuristic_us per row; fused-fold pipelined variant in the sweep)
   serving  — continuous-batching engine under open-loop Poisson load
   roofline — per (arch x shape) roofline table from the dry-run artifacts
 """
@@ -76,6 +78,8 @@ def main() -> None:
                               kernels_bench.conv_quant_epitome(e),
                               kernels_bench.legalized_plan(e),
                               kernels_bench.lm_plan(e)),
+        # heuristic-vs-tuned block shapes on conv + LM decode geometry
+        "autotune": kernels_bench.autotune_blocks,
         # sharded serving smoke: meaningful when the process has > 1
         # device (CI forces 8 CPU host devices via XLA_FLAGS)
         "sharded": kernels_bench.sharded_plan,

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Mapping, Optional
+from typing import Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +69,11 @@ class EpLayerConfig:
     mode: str = "wrapped"                    # reconstruct | wrapped | kernel
     quant: Optional[QuantConfig] = None      # None -> fp weights
     placement: Optional[LayerPlacement] = None   # None -> role-based default
+    # autotuned kernel block shapes (bt, bk, bn) from plan provenance
+    # (kernels/autotune.py); None -> the ops.py heuristics.  fused_fold
+    # selects the in-kernel fold variant the tuner picked.
+    blocks: Optional[Tuple[int, int, int]] = None
+    fused_fold: bool = False
 
     @property
     def is_epitome(self) -> bool:
@@ -104,9 +109,11 @@ def _quant_kernel_call(cfg: EpLayerConfig, x: Array, packed_arrays) -> Array:
     (spec, quant)."""
     from repro.kernels.ops import (PackedEpitome, pack_blocks,
                                    quant_epitome_matmul)
-    bk, bn = pack_blocks(cfg.spec, cfg.quant)
+    bk, bn = pack_blocks(cfg.spec, cfg.quant, cfg.blocks)
     packed = PackedEpitome(*packed_arrays, bk, bn)
-    return quant_epitome_matmul(x, None, cfg.spec, cfg.quant, packed=packed)
+    bt = cfg.blocks[0] if cfg.blocks is not None else None
+    return quant_epitome_matmul(x, None, cfg.spec, cfg.quant, packed=packed,
+                                bt=bt, fused_fold=cfg.fused_fold)
 
 
 def _quant_kernel_fwd(cfg, x, packed_arrays):
@@ -137,7 +144,7 @@ _quant_kernel_apply = jax.jit(_quant_kernel_call, static_argnums=(0,))
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _pack_arrays(E: Array, *, cfg: EpLayerConfig):
     from repro.kernels.ops import pack_epitome
-    p = pack_epitome(E, cfg.spec, cfg.quant)
+    p = pack_epitome(E, cfg.spec, cfg.quant, blocks=cfg.blocks)
     return p.q, p.scales, p.zeros
 
 
@@ -267,7 +274,7 @@ def _packed_of(params: dict, cfg: EpLayerConfig):
     """Rebuild the PackedEpitome from prepacked param entries (block sizes
     are deterministic from spec + qcfg, so only the arrays are stored)."""
     from repro.kernels.ops import PackedEpitome, pack_blocks
-    bk, bn = pack_blocks(cfg.spec, cfg.quant)
+    bk, bn = pack_blocks(cfg.spec, cfg.quant, cfg.blocks)
     return PackedEpitome(params["Eq"], params["Es"], params["Ez"], bk, bn)
 
 
@@ -284,7 +291,7 @@ def effective_weight(params: dict, cfg: EpLayerConfig) -> Array:
                 # mirror the fused path's packed (int8, per-block s/z) quant
                 from repro.kernels.ops import pack_epitome
                 from .quant import dequantize_packed
-                p = pack_epitome(E, cfg.spec, cfg.quant)
+                p = pack_epitome(E, cfg.spec, cfg.quant, blocks=cfg.blocks)
                 E = dequantize_packed(p.q, p.scales, p.zeros,
                                       (p.bk, p.bn)).astype(E.dtype)
             else:

@@ -183,10 +183,17 @@ def dequantize_epitome(q: Array, S: Array, Z: Array) -> Array:
 # Packed (int8-storage) quantization — the kernel-side contract
 # ---------------------------------------------------------------------------
 def _block_reduce(x: Array, bk: int, bn: int, fn) -> Array:
-    """Reduce an (m, n) map to (m/bk, n/bn) per exact (bk x bn) block."""
+    """Reduce an (m, n) map to (ceil(m/bk), ceil(n/bn)) per (bk x bn)
+    block.  Ragged edges (prime/odd m) are edge-replicated like
+    ``_tile_reduce``: the padding duplicates values already inside the
+    ragged block, so it is neutral under min/max — the ranges of real rows
+    never see the kernel-side zero padding."""
     m, n = x.shape
-    assert m % bk == 0 and n % bn == 0, (m, bk, n, bn)
-    return fn(x.reshape(m // bk, bk, n // bn, bn), axis=(1, 3))
+    gm, gn = -(-m // bk), -(-n // bn)
+    pm, pn = gm * bk - m, gn * bn - n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)), mode="edge")
+    return fn(x.reshape(gm, bk, gn, bn), axis=(1, 3))
 
 
 def _expand_blocks(t: Array, bk: int, bn: int) -> Array:
@@ -213,11 +220,16 @@ def quantize_epitome_packed(E: Array, spec: Optional[EpitomeSpec],
     ``cfg.tile`` crossbars the codes are bit-identical to fake_quant's.
     """
     bk, bn = block
+    m, n = E.shape
     alpha, beta = epitome_ranges(E, spec, cfg)
     a_b = _block_reduce(alpha, bk, bn, jnp.min)
     b_b = _block_reduce(beta, bk, bn, jnp.max)
     S, Z = scale_zero(a_b, b_b, cfg)
-    q = quantize(E, _expand_blocks(S, bk, bn), _expand_blocks(Z, bk, bn), cfg)
+    # trim the expanded maps back to (m, n) when blocks tile raggedly —
+    # the scale grid keeps its ceil shape (the kernel zero-pads q's rows
+    # instead, which the zero-padded folded activation makes dot-neutral)
+    q = quantize(E, _expand_blocks(S, bk, bn)[:m, :n],
+                 _expand_blocks(Z, bk, bn)[:m, :n], cfg)
     shift = code_shift(cfg)
     return (q - shift).astype(jnp.int8), S, Z + shift
 
@@ -227,8 +239,9 @@ def dequantize_packed(q: Array, scales: Array, zeros: Array,
     """Inverse of quantize_epitome_packed (the jnp oracle the kernel's
     in-register dequant is tested against): (q + z) * s per block."""
     bk, bn = block
-    S = _expand_blocks(scales, bk, bn)
-    Z = _expand_blocks(zeros, bk, bn)
+    m, n = q.shape
+    S = _expand_blocks(scales, bk, bn)[:m, :n]
+    Z = _expand_blocks(zeros, bk, bn)[:m, :n]
     return (q.astype(jnp.float32) + Z) * S
 
 

@@ -18,6 +18,15 @@ quant_epitome_matmul — the fusion of the two above and the paper's flagship
                  steers output-column indirection — one int8 HBM read of the
                  compressed weight serves every virtual tile.
 
+autotune       — measured-latency block-shape search over a (bt, bk, bn)
+                 candidate grid per (spec, bits, T bucket), with a
+                 persistent per-backend JSON cache under benchmarks/tuned/
+                 and plan-provenance integration (legalize --tune); the
+                 grid dims of the matmul kernels are declared parallel so
+                 Mosaic double-buffers code tiles across the k loop, and a
+                 fused-fold kernel variant keeps the folded activation in
+                 VMEM on the decode path.
+
 Each kernel ships a pure-jnp oracle in ref.py and a jit'd public wrapper in
 ops.py; tests sweep shapes/dtypes in interpret mode against the oracle.
 """

@@ -14,6 +14,12 @@ is the MXU hot loop.
 
 Grid: (T/bt, gn, m/bk), k innermost for accumulation.  VMEM per step:
 x (bt, bk) + E (bk, bn) + acc (bt, bn) fp32 — MXU-aligned multiples of 128.
+
+The (i, j) grid dims are declared ``parallel`` (only k carries the
+accumulator), so Mosaic is free to double-buffer the E tiles across the k
+loop and overlap the next block's HBM->VMEM copy with the current dot —
+the pipelining half of the autotuner story (kernels/autotune.py picks the
+block shapes, the dimension semantics let the compiler hide the loads).
 """
 from __future__ import annotations
 
@@ -72,5 +78,7 @@ def epitome_matmul_blocks(x_folded: Array, E: Array, col_blocks,
             scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((T, gn * bn), x_folded.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(col_blocks, x_folded, E)

@@ -18,23 +18,43 @@ import numpy as np
 from ..core.epitome import EpitomeSpec
 from ..core.quant import QuantConfig, quantize_epitome_packed
 from .epitome_matmul import epitome_matmul_blocks
-from .quant_epitome_matmul import quant_epitome_matmul_blocks
+from .quant_epitome_matmul import (quant_epitome_matmul_blocks,
+                                   quant_epitome_matmul_fused_fold)
 from .quant_matmul import quant_matmul as _quant_matmul
 from .wkv6 import wkv6_chunked
 
 _INTERPRET = jax.default_backend() == "cpu"
 
 
-def kernel_col_blocks(spec: EpitomeSpec) -> np.ndarray:
+def kernel_col_blocks(spec: EpitomeSpec,
+                      bn: Optional[int] = None) -> np.ndarray:
     """Static OFAT table: output block j <- epitome column block cb[j].
     Exact only for bn-aligned column offsets (the planner's wrap_cols
     designs give offset 0; pim.plan.plan_conv_specs emits only
     aligned families); unaligned spread offsets are snapped to their
     containing block — the kernel then defines its own (snapped) sampling,
-    tested against the block oracle rather than exact reconstruction."""
+    tested against the block oracle rather than exact reconstruction.
+
+    With ``bn`` (a divisor of spec.bn — an autotuned narrower kernel
+    block), each spec.bn-wide virtual block splits into spec.bn/bn
+    sub-blocks; requires bn-aligned offsets so the split samples exactly
+    the same columns (``col_blocks_splittable`` gates candidates)."""
     offs = spec.col_offsets()
-    cb = offs // spec.bn
-    return cb.astype(np.int32)
+    if bn is None or bn == spec.bn:
+        return (offs // spec.bn).astype(np.int32)
+    assert spec.bn % bn == 0 and (offs % bn == 0).all(), (spec, bn)
+    sub = spec.bn // bn
+    cb = offs[:, None] // bn + np.arange(sub)[None, :]
+    return cb.reshape(-1).astype(np.int32)
+
+
+def col_blocks_splittable(spec: EpitomeSpec, bn: int) -> bool:
+    """True iff ``kernel_col_blocks(spec, bn)`` samples exactly the same W
+    columns as the spec.bn table — the gate for autotuned bn candidates."""
+    if bn == spec.bn:
+        return True
+    return (spec.bn % bn == 0 and spec.n % bn == 0
+            and bool((spec.col_offsets() % bn == 0).all()))
 
 
 def fold_rows(x: jax.Array, spec: EpitomeSpec) -> jax.Array:
@@ -46,21 +66,26 @@ def fold_rows(x: jax.Array, spec: EpitomeSpec) -> jax.Array:
 
 
 def epitome_matmul(x: jax.Array, E: jax.Array, spec: EpitomeSpec,
-                   *, interpret: Optional[bool] = None) -> jax.Array:
+                   *, bt: Optional[int] = None, bk: Optional[int] = None,
+                   bn: Optional[int] = None,
+                   interpret: Optional[bool] = None) -> jax.Array:
     """y = x @ W(E) via the fused epitome-space kernel.
 
     Leading dims are free-form — (B, M), (B, S, M) or a conv patch matrix
     (N, H', W', kh*kw*cin) all flatten to (T, m) rows; the fold runs once
-    per row regardless of how many kernel windows produced it."""
+    per row regardless of how many kernel windows produced it.  bt/bk/bn
+    override the heuristic block shapes (an autotuned triple); a bk that
+    tiles m raggedly zero-pads the contraction dim (dot-neutral)."""
     interpret = _INTERPRET if interpret is None else interpret
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
     T = x2.shape[0]
-    folded, bt = _pad_rows(fold_rows(x2, spec))      # (Tp, m)
-    y = epitome_matmul_blocks(folded, E.astype(x.dtype),
-                              kernel_col_blocks(spec),
-                              bt=bt, bk=_pick_bk(spec.m), bn=spec.bn,
-                              interpret=interpret)
+    bk = _pick_bk(spec.m) if bk is None else bk
+    bn = spec.bn if bn is None else bn
+    folded, bt = _pad_rows(fold_rows(x2, spec), bt)  # (Tp, m)
+    folded, E = _pad_contraction(folded, E.astype(x.dtype), bk)
+    y = epitome_matmul_blocks(folded, E, kernel_col_blocks(spec, bn),
+                              bt=bt, bk=bk, bn=bn, interpret=interpret)
     return y[:T, :spec.N].reshape(*lead, spec.N)
 
 
@@ -95,11 +120,36 @@ def _pad_rows(x2: jax.Array, bt: Optional[int] = None) -> tuple:
     return x2, bt
 
 
+_BK_BLOCKS = (512, 256, 128, 64, 32, 16, 8)
+
+
 def _pick_bk(m: int) -> int:
-    for bk in (512, 256, 128, 64, 32, 16, 8):
+    """Contraction block for an m-row epitome.  Prefers the largest block
+    dividing m exactly; a prime/odd m no longer falls through to bk = m
+    (one giant VMEM-blowing block) — it takes the largest standard block
+    not exceeding m and the caller zero-pads the contraction dim up to a
+    block multiple (``_pad_contraction``; zero activation columns make the
+    padded weight rows dot-neutral)."""
+    for bk in _BK_BLOCKS:
         if m % bk == 0:
             return bk
-    return m
+    for bk in _BK_BLOCKS:
+        if bk <= m:
+            return bk
+    return m                  # m < 8: a single (tiny) block
+
+
+def _pad_contraction(folded: jax.Array, w_rows: jax.Array, bk: int) -> tuple:
+    """Zero-pad the contraction dim of (T, m) x (m, n) up to a bk multiple.
+    The folded activation's padded *columns* are zero, so the padded weight
+    *rows* contribute exactly 0 to every dot regardless of their values —
+    the same neutrality argument as ``_pad_rows``, on the other axis."""
+    m = folded.shape[1]
+    pad = (-m) % bk
+    if pad:
+        folded = jnp.pad(folded, ((0, 0), (0, pad)))
+        w_rows = jnp.pad(w_rows, ((0, pad), (0, 0)))
+    return folded, w_rows
 
 
 def wkv6(r, k, v, logw, u, *, chunk: int = 64,
@@ -146,23 +196,37 @@ class PackedEpitome(NamedTuple):
 def _pick_bk_quant(m: int, tile: int) -> int:
     """Row-block for the quant kernel: never wider than the quantizer's
     crossbar tile, so each kernel block nests inside one scale tile and the
-    packed codes stay bit-identical to fake_quant's."""
-    for bk in (256, 128, 64, 32, 16, 8):
+    packed codes stay bit-identical to fake_quant's.  Same prime/odd-m
+    fallback as ``_pick_bk``: the largest standard block not exceeding
+    min(tile, m) instead of one giant bk = m block (the ragged tail is
+    zero-padded at kernel-call time, never inside the quantizer)."""
+    for bk in _BK_BLOCKS[1:]:
         if bk <= tile and m % bk == 0:
+            return bk
+    for bk in _BK_BLOCKS[1:]:
+        if bk <= min(tile, m):
             return bk
     return m
 
 
-def pack_blocks(spec: EpitomeSpec, qcfg: QuantConfig) -> tuple:
+def pack_blocks(spec: EpitomeSpec, qcfg: QuantConfig,
+                blocks: Optional[tuple] = None) -> tuple:
     """The (bk, bn) kernel block a pack of (spec, qcfg) uses — deterministic,
-    so prepacked storage only needs the arrays."""
+    so prepacked storage only needs the arrays.  ``blocks`` is an autotuned
+    (bt, bk, bn) triple (kernels/autotune.py; plan provenance) overriding
+    the heuristic — bt is the activation-side block and does not affect the
+    pack layout."""
+    if blocks is not None:
+        bt, bk, bn = blocks
+        assert col_blocks_splittable(spec, bn), (spec, bn)
+        return bk, bn
     return _pick_bk_quant(spec.m, qcfg.tile), spec.bn
 
 
-def pack_epitome(E: jax.Array, spec: EpitomeSpec, qcfg: QuantConfig
-                 ) -> PackedEpitome:
+def pack_epitome(E: jax.Array, spec: EpitomeSpec, qcfg: QuantConfig,
+                 blocks: Optional[tuple] = None) -> PackedEpitome:
     """Quantize an epitome into the kernel's storage layout."""
-    bk, bn = pack_blocks(spec, qcfg)
+    bk, bn = pack_blocks(spec, qcfg, blocks)
     q, scales, zeros = quantize_epitome_packed(E, spec, qcfg, (bk, bn))
     return PackedEpitome(q, scales, zeros, bk, bn)
 
@@ -170,12 +234,19 @@ def pack_epitome(E: jax.Array, spec: EpitomeSpec, qcfg: QuantConfig
 def quant_epitome_matmul(x: jax.Array, E: Optional[jax.Array],
                          spec: EpitomeSpec, qcfg: Optional[QuantConfig] = None,
                          *, packed: Optional[PackedEpitome] = None,
+                         bt: Optional[int] = None, fused_fold: bool = False,
                          interpret: Optional[bool] = None) -> jax.Array:
     """y = x @ W(deq(Q(E))) via the fused int8-epitome kernel.
 
     Pass ``packed`` (from pack_epitome) to skip re-quantizing per call —
     the serving path; otherwise E is packed on the fly (jit folds the pack
-    into the same program, still one HBM read of int8 codes)."""
+    into the same program, still one HBM read of int8 codes).
+
+    ``bt`` overrides the per-call ``_pad_rows`` derivation so a fixed
+    decode batch reuses one tuned row block instead of re-picking per T;
+    ``fused_fold=True`` runs the fold inside the kernel (the folded
+    activation never round-trips HBM — decode-path pipelining).  Both come
+    from kernels/autotune.py via plan provenance."""
     interpret = _INTERPRET if interpret is None else interpret
     if packed is None:
         assert E is not None and qcfg is not None
@@ -183,9 +254,24 @@ def quant_epitome_matmul(x: jax.Array, E: Optional[jax.Array],
     *lead, M = x.shape
     x2 = x.reshape(-1, M)
     T = x2.shape[0]
-    folded, bt = _pad_rows(fold_rows(x2, spec))      # (Tp, m)
+    bk, bn = packed.bk, packed.bn
+    q = packed.q
+    pad_m = (-spec.m) % bk          # ragged (prime/odd) epitome row count
+    if pad_m:
+        q = jnp.pad(q, ((0, pad_m), (0, 0)))
+    cb = kernel_col_blocks(spec, bn)
+    if fused_fold:
+        x2p, bt = _pad_rows(x2.astype(jnp.float32), bt)
+        gm, bm = spec.gm, spec.bm
+        xt = jnp.pad(x2p, ((0, 0), (0, gm * bm - M))).T   # (Mp, Tp)
+        y = quant_epitome_matmul_fused_fold(
+            xt, q, packed.scales, packed.zeros, cb, spec.row_offsets(),
+            bm=bm, bt=bt, bk=bk, bn=bn, interpret=interpret).astype(x.dtype)
+        return y[:T, :spec.N].reshape(*lead, spec.N)
+    folded, bt = _pad_rows(fold_rows(x2, spec), bt)  # (Tp, m)
+    if pad_m:
+        folded = jnp.pad(folded, ((0, 0), (0, pad_m)))
     y = quant_epitome_matmul_blocks(
-        folded.astype(x.dtype), packed.q, packed.scales, packed.zeros,
-        kernel_col_blocks(spec), bt=bt,
-        bk=packed.bk, bn=packed.bn, interpret=interpret)
+        folded.astype(x.dtype), q, packed.scales, packed.zeros,
+        cb, bt=bt, bk=bk, bn=bn, interpret=interpret)
     return y[:T, :spec.N].reshape(*lead, spec.N)

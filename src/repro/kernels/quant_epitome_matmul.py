@@ -22,6 +22,19 @@ for every output-column block j, where
 
 Grid: (T/bt, gn, m/bk), k innermost for accumulation.  VMEM per step:
 x (bt, bk) + Q (bk, bn) int8 + acc (bt, bn) fp32 + two scalars.
+
+Two pipelining levers live here (the kernel half of kernels/autotune.py):
+
+  * The (i, j) grid dims are declared ``parallel`` — only k carries the
+    accumulator — so Mosaic double-buffers the int8 code tiles across the
+    k loop: the next block's HBM->VMEM copy overlaps the current dot.
+  * ``quant_epitome_matmul_fused_fold`` takes the *unfolded* activation
+    plus the scalar-prefetched row-offset table and performs the fold_rows
+    segment-sum into a VMEM scratch inside the kernel, so on the decode
+    path the folded activation never round-trips HBM between the fold and
+    the matmul.  Contributions accumulate in ascending virtual-block order
+    — the same order as jax.ops.segment_sum — so the fold is bit-identical
+    to the ops.fold_rows + quant_epitome_matmul_blocks path.
 """
 from __future__ import annotations
 
@@ -88,5 +101,87 @@ def quant_epitome_matmul_blocks(x_folded: Array, q: Array, scales: Array,
             scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((T, gn * bn), x_folded.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(col_blocks, x_folded, q, scales, zeros)
+
+
+def _fused_fold_kernel(cb_ref, ro_ref, xt_ref, q_ref, s_ref, z_ref, o_ref,
+                       fold_ref, acc_ref, *, nk: int, gm: int, bm: int):
+    """Fold + dequant + dot in one grid step.  ``xt_ref`` holds the whole
+    (Mp, bt) transposed activation slab for row block i; the fold runs once
+    per i (at j == k == 0) into the (m_pad, bt) scratch, then every (j, k)
+    step contracts one (bk, bt) slice of it against one int8 code tile."""
+    @pl.when((pl.program_id(1) == 0) & (pl.program_id(2) == 0))
+    def _fold():
+        fold_ref[...] = jnp.zeros_like(fold_ref)
+        for i in range(gm):   # ascending block order == segment_sum order
+            off = ro_ref[i]
+            fold_ref[pl.dslice(off, bm), :] = (
+                fold_ref[pl.dslice(off, bm), :]
+                + xt_ref[pl.dslice(i * bm, bm), :])
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = pl.program_id(2)
+    w = (q_ref[...].astype(jnp.float32) + z_ref[0, 0]) * s_ref[0, 0]
+    xk = fold_ref[pl.dslice(k * (fold_ref.shape[0] // nk),
+                            fold_ref.shape[0] // nk), :]
+    # contract the fold scratch's row dim (epitome rows) against w's rows
+    acc_ref[...] += jax.lax.dot_general(
+        xk.astype(jnp.float32), w, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_epitome_matmul_fused_fold(xt: Array, q: Array, scales: Array,
+                                    zeros: Array, col_blocks, row_offsets,
+                                    *, bm: int, bt: int, bk: int, bn: int,
+                                    interpret: bool = False) -> Array:
+    """Fused-fold variant: xt is the (Mp, T) *transposed, unfolded*
+    activation (Mp = gm*bm zero-padded virtual rows); row_offsets is the
+    scalar-prefetched (gm,) epitome-row offset table (spec.row_offsets()).
+    q/scales/zeros as in quant_epitome_matmul_blocks with m pre-padded to a
+    bk multiple.  Returns (T, gn*bn) without the folded activation ever
+    leaving VMEM."""
+    Mp, T = xt.shape
+    m, n = q.shape
+    col_blocks = jnp.asarray(col_blocks, jnp.int32)
+    row_offsets = jnp.asarray(row_offsets, jnp.int32)
+    gn = col_blocks.shape[0]
+    gm = row_offsets.shape[0]
+    assert Mp == gm * bm, (Mp, gm, bm)
+    assert T % bt == 0 and m % bk == 0 and n % bn == 0, (T, bt, m, bk, n, bn)
+    assert scales.shape == (m // bk, n // bn), (scales.shape, m // bk, n // bn)
+    nk = m // bk
+
+    grid = (T // bt, gn, nk)
+    kernel = functools.partial(_fused_fold_kernel, nk=nk, gm=gm, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((Mp, bt), lambda i, j, k, cb, ro: (0, i)),
+                pl.BlockSpec((bk, bn), lambda i, j, k, cb, ro: (k, cb[j])),
+                pl.BlockSpec((1, 1), lambda i, j, k, cb, ro: (k, cb[j])),
+                pl.BlockSpec((1, 1), lambda i, j, k, cb, ro: (k, cb[j])),
+            ],
+            out_specs=pl.BlockSpec((bt, bn), lambda i, j, k, cb, ro: (i, j)),
+            scratch_shapes=[pltpu.VMEM((m, bt), jnp.float32),
+                            pltpu.VMEM((bt, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, gn * bn), jnp.float32),
+        # the fold scratch is shared across j and k for a fixed i, so only
+        # the row-block dim may be reordered freely
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(col_blocks, row_offsets, xt, q, scales, zeros)

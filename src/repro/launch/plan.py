@@ -64,6 +64,17 @@ def cmd_legalize(args) -> None:
         data, model = parse_mesh(args.mesh)
         mesh_shape = {"data": data, "model": model}
     legal = legalize_plan(plan, patch=patch, mesh_shape=mesh_shape)
+    if args.tune:
+        from ..kernels.autotune import tune_plan
+        legal = tune_plan(legal, t=args.tune_t, grid=args.tune_grid,
+                          iters=args.tune_iters,
+                          cache_dir=args.tune_cache or None)
+        rec = legal.provenance.get("tuned_blocks") or {}
+        for name, r in sorted(rec.items()):
+            print(f"[tune] {name}: bt={r['bt']} bk={r['bk']} bn={r['bn']} "
+                  f"fused_fold={r['fused_fold']} "
+                  f"tuned={r['tuned_us']:.1f}us heuristic="
+                  f"{r['heuristic_us']:.1f}us source={r['source']}")
     legal.save(args.out)
     pred = legal.predicted
     print(f"[plan] legalized {plan.arch}: snap error "
@@ -193,6 +204,10 @@ def cmd_run(args) -> None:
     print(f"[plan] {plan.arch}: mode={model.mode} "
           f"{plan.n_epitomized}/{len(plan.layers)} layers epitomized, "
           f"specs byte-identical to plan: True")
+    tuned = plan.tuned_blocks()
+    if tuned:
+        print(f"[plan] tuned blocks honored for {len(tuned)} layer(s): "
+              + ", ".join(f"{k}={v[0]}" for k, v in sorted(tuned.items())))
     key = jax.random.PRNGKey(args.seed)
     params = model.prepack(model.init(key))
     x = jax.random.normal(jax.random.PRNGKey(args.seed + 1),
@@ -243,6 +258,17 @@ def main() -> None:
                    help="'DATA,MODEL': also snap placement annotations to "
                         "this mesh's divisibility constraints")
     s.add_argument("--out", default="plan_legal.json")
+    s.add_argument("--tune", action="store_true",
+                   help="autotune kernel block shapes per epitomized layer "
+                        "and record the winners in plan provenance "
+                        "(schema-additive; plans without it run unchanged)")
+    s.add_argument("--tune-t", type=int, default=1,
+                   help="per-image batch assumed when deriving the tuned T")
+    s.add_argument("--tune-grid", default="tiny", choices=("tiny", "default"),
+                   help="candidate-grid size for --tune")
+    s.add_argument("--tune-iters", type=int, default=2)
+    s.add_argument("--tune-cache", default="",
+                   help="tuning-cache dir (default: benchmarks/tuned/)")
     s.set_defaults(fn=cmd_legalize)
 
     s = sub.add_parser("show", help="print a plan")

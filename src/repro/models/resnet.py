@@ -19,7 +19,7 @@ offline; the smoke tests train on synthetic data — DESIGN.md §7).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +34,12 @@ from ..pim.workloads import (LayerShape, resnet50_layers, resnet101_layers,
 Array = jax.Array
 
 
-def _ep_cfg(spec: Optional[EpitomeSpec], quant_bits: int, mode: str) -> EpLayerConfig:
+def _ep_cfg(spec: Optional[EpitomeSpec], quant_bits: int, mode: str,
+            blocks: Optional[Tuple[int, int, int]] = None,
+            fused_fold: bool = False) -> EpLayerConfig:
     q = QuantConfig(bits=quant_bits) if quant_bits else None
-    return EpLayerConfig(spec=spec, mode=mode, quant=q)
+    return EpLayerConfig(spec=spec, mode=mode, quant=q, blocks=blocks,
+                         fused_fold=fused_fold)
 
 
 class ResNetModel:
@@ -49,6 +52,8 @@ class ResNetModel:
                  specs: Optional[Sequence[Optional[EpitomeSpec]]] = None,
                  quant_bits: Union[int, Sequence[Optional[int]]] = 0,
                  mode: str = "reconstruct",
+                 tuned: Optional[Mapping[str, Tuple[Tuple[int, int, int],
+                                                    bool]]] = None,
                  width_scale: float = 1.0, num_classes: int = 0):
         self.layers = list(layers)
         self.specs = list(specs) if specs is not None else [None] * len(layers)
@@ -61,6 +66,7 @@ class ResNetModel:
         else:
             self.layer_bits = [int(quant_bits or 0)] * len(self.layers)
         self.mode = mode
+        self.tuned = dict(tuned) if tuned else {}
         self.num_classes = num_classes or self.layers[-1].cout
 
     @classmethod
@@ -75,11 +81,15 @@ class ResNetModel:
             raise ValueError(f"plan layers {got} do not match the "
                              f"{plan.arch} inventory {names}")
         return cls(layers, plan.specs(), quant_bits=plan.bits(),
-                   mode=plan.uniform_mode(), **kw)
+                   mode=plan.uniform_mode(), tuned=plan.tuned_blocks(), **kw)
 
     def _cfgs(self):
-        return [(_ep_cfg(s, b, self.mode))
-                for s, b in zip(self.specs, self.layer_bits)]
+        out = []
+        for l, s, b in zip(self.layers, self.specs, self.layer_bits):
+            blocks, fused = self.tuned.get(l.name, (None, False))
+            out.append(_ep_cfg(s, b, self.mode, blocks=blocks,
+                               fused_fold=fused))
+        return out
 
     def init(self, key: Array, dtype=jnp.float32) -> Dict[str, Any]:
         params: Dict[str, Any] = {}

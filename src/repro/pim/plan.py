@@ -213,20 +213,36 @@ class EpitomePlan:
     def is_legalized(self) -> bool:
         return bool(self.provenance.get("legalized", False))
 
+    def tuned_blocks(self) -> Dict[str, Tuple[Tuple[int, int, int], bool]]:
+        """Autotuned kernel blocks from provenance (legalize --tune):
+        layer name -> ((bt, bk, bn), fused_fold).  {} when the plan was
+        never tuned — the record is schema-additive and jax-free."""
+        rec = self.provenance.get("tuned_blocks") or {}
+        out: Dict[str, Tuple[Tuple[int, int, int], bool]] = {}
+        for name, r in rec.items():
+            out[name] = ((int(r["bt"]), int(r["bk"]), int(r["bn"])),
+                         bool(r.get("fused_fold", False)))
+        return out
+
     def layer_configs(self) -> Tuple[Tuple[str, Any], ...]:
         """The plan as a ``(name, EpLayerConfig)`` tuple — the value
         ``ModelConfig.layer_config`` consumes, so a plan drives the LM's
-        per-layer {spec, weight_bits, mode} by param-tree path.  Lazy
+        per-layer {spec, weight_bits, mode} by param-tree path.  Autotuned
+        block shapes in provenance ride along (EpLayerConfig.blocks), so a
+        tuned plan serves with its measured-winner kernel grid.  Lazy
         imports keep the planner importable without jax."""
         from ..core.layers import EpLayerConfig
         from ..core.quant import QuantConfig
+        tuned = self.tuned_blocks()
         out = []
         for lp in self.layers:
             q = None if lp.weight_bits is None else QuantConfig(
                 bits=lp.weight_bits)
+            blocks, fused = tuned.get(lp.name, (None, False))
             out.append((lp.name,
                         EpLayerConfig(spec=lp.spec, mode=lp.mode, quant=q,
-                                      placement=lp.placement)))
+                                      placement=lp.placement, blocks=blocks,
+                                      fused_fold=fused)))
         return tuple(out)
 
     def placements(self) -> List[Optional[LayerPlacement]]:
@@ -455,15 +471,19 @@ def legalize_spec(layer: LayerShape, spec: Optional[EpitomeSpec],
 
 
 def pack_grid(spec: EpitomeSpec, tile: int = 256) -> Tuple[int, int]:
-    """(m/bk, n/bn) shape of a packed epitome's Es/Ez scale grids.
+    """(ceil(m/bk), n/bn) shape of a packed epitome's Es/Ez scale grids.
 
     A jax-free mirror of ``kernels.ops.pack_blocks`` (``tile`` is the
     quantizer's crossbar tile, QuantConfig.tile — the plan pipeline always
     builds QuantConfigs at the 256 default) — the planner must know the
     grid shape to snap ``scales='shard'`` placements without importing the
-    kernel stack; a cross-check test guards against drift."""
-    bk = next((b for b in (256, 128, 64, 32, 16, 8)
-               if b <= tile and spec.m % b == 0), spec.m)
+    kernel stack; a cross-check test guards against drift.  Mirrors
+    ``_pick_bk_quant``'s prime/odd-m fallback: the largest standard block
+    not exceeding min(tile, m) when nothing divides m exactly."""
+    blocks = (256, 128, 64, 32, 16, 8)
+    bk = next((b for b in blocks if b <= tile and spec.m % b == 0), None)
+    if bk is None:
+        bk = next((b for b in blocks if b <= min(tile, spec.m)), spec.m)
     return -(-spec.m // bk), -(-spec.n // spec.bn)
 
 

@@ -236,6 +236,94 @@ class TestQuantEpitomeMatmul:
                                    rtol=1e-3, atol=1e-3)
 
 
+class TestPickBkAndOverrides:
+    """The contraction-dim twin of the bt cliff: prime/odd epitome row
+    counts m must not collapse the k grid to a single m-sized block —
+    callers zero-pad the folded activation (dot-neutral) up to a block
+    multiple instead — plus the explicit bt override and the fused-fold
+    kernel variant."""
+
+    PRIME_M = dict(M=512, N=512, m=251, n=256, bm=128, bn=256)
+
+    def test_pick_bk_no_degenerate_blocks(self):
+        for m in (8, 16, 97, 193, 251, 256, 1000, 1024):
+            bk = ops._pick_bk(m)
+            assert 8 <= bk <= max(m, 8), (m, bk)
+            assert (-m) % bk < bk
+        assert ops._pick_bk(1024) == 512         # exact divisor preferred
+        assert ops._pick_bk(251) == 128          # prime: largest block <= m
+
+    def test_pick_bk_quant_respects_tile(self):
+        assert ops._pick_bk_quant(1024, 256) == 256
+        assert ops._pick_bk_quant(251, 256) == 128   # prime m
+        assert ops._pick_bk_quant(97, 64) == 64      # capped by tile
+        assert ops._pick_bk_quant(4, 256) == 4       # tiny m fallback
+
+    def test_prime_m_fp_kernel(self):
+        spec = EpitomeSpec(**self.PRIME_M)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, spec.M))
+        y = ops.epitome_matmul(x, E, spec, interpret=True)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(x @ reconstruct(E, spec)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_prime_m_quant_kernel(self):
+        from repro.core.quant import QuantConfig, fake_quant
+        spec = EpitomeSpec(**self.PRIME_M)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(2), (16, spec.M))
+        cfg = QuantConfig(bits=8)
+        p = ops.pack_epitome(E, spec, cfg)
+        assert p.bk >= 8 and p.q.shape[0] == spec.m
+        y = ops.quant_epitome_matmul(x, None, spec, packed=p, interpret=True)
+        ref = x @ reconstruct(fake_quant(E, spec, cfg), spec)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_bt_override_bit_identical(self):
+        """Row-block choice never reassociates the contraction, so an
+        explicit bt (the engine's fixed decode batch) is bit-identical to
+        the heuristic pick."""
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**ALIGNED)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(3), (8, spec.M))
+        p = ops.pack_epitome(E, spec, QuantConfig(bits=3))
+        y0 = ops.quant_epitome_matmul(x, None, spec, packed=p, interpret=True)
+        for bt in (8, 16, 64):
+            y = ops.quant_epitome_matmul(x, None, spec, packed=p, bt=bt,
+                                         interpret=True)
+            np.testing.assert_array_equal(np.asarray(y0), np.asarray(y))
+
+    @pytest.mark.parametrize("spec_kw", [ALIGNED, WRAPPED, PRIME_M],
+                             ids=["aligned", "wrapped", "prime-m"])
+    def test_fused_fold_bit_identical(self, spec_kw):
+        """The fused-fold variant (fold inside the kernel, VMEM-resident)
+        accumulates row blocks in ascending order exactly like
+        fold_rows' segment_sum, so its output is bit-identical to the
+        standard kernel's."""
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**spec_kw)
+        E = jax.random.normal(KEY, (spec.m, spec.n))
+        x = jax.random.normal(jax.random.PRNGKey(4), (8, spec.M))
+        p = ops.pack_epitome(E, spec, QuantConfig(bits=3))
+        y0 = ops.quant_epitome_matmul(x, None, spec, packed=p, interpret=True)
+        y1 = ops.quant_epitome_matmul(x, None, spec, packed=p,
+                                      fused_fold=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+    def test_pack_blocks_explicit_and_splittable(self):
+        from repro.core.quant import QuantConfig
+        spec = EpitomeSpec(**ALIGNED)
+        q = QuantConfig(bits=3)
+        assert ops.pack_blocks(spec, q) == (256, 256)
+        assert ops.pack_blocks(spec, q, (8, 128, 256)) == (128, 256)
+        assert ops.col_blocks_splittable(spec, 128)
+        sub = ops.kernel_col_blocks(spec, 128)
+        assert sub.shape[0] == 2 * ops.kernel_col_blocks(spec).shape[0]
+
+
 class TestPickBt:
     def test_exact_divisor_preferred(self):
         """When a block divides T, no padding is needed and the largest
