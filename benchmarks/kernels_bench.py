@@ -355,3 +355,94 @@ def quant_epitome(emit) -> None:
         emit(f"kernels/quant_epitome-{bits}bit", dt,
              f"max_err={err:.2e};w_bytes={q_bytes};"
              f"x{dense_bytes/q_bytes:.0f} smaller than dense")
+
+
+def costmodel_smoke(emit) -> None:
+    """Simulator-vs-measured rank correlation over a candidate sweep, plus
+    the memoization contract of the MeasuredCost spine (the CI gate for
+    hardware-in-the-loop plan search).
+
+    The candidate set is a k-sweep of *how many* layers run epitomized
+    (k = 0..n over the auto-planned tiny design): on this host both the
+    calibrated analytic model and the interpret-mode kernels get slower as
+    more layers epitomize, so a cost model worth searching with must rank
+    the sweep the same way (Spearman rho >= 0.5).  Every (legalized spec,
+    bits, T-bucket) key across the whole sweep must be timed exactly once
+    — the k-sweep shares layer keys heavily, so this exercises the memo,
+    not just the happy path."""
+    import tempfile
+
+    from repro.kernels.autotune import wall_timer
+    from repro.pim.costmodel import MeasuredCost
+    from repro.pim.plan import (auto_plan, exec_patch_for, inventory_for,
+                                simulator_for)
+
+    class CountingWall:
+        def __init__(self):
+            self.calls = 0
+
+        def __call__(self, fn, iters):
+            self.calls += 1
+            return wall_timer(fn, iters)
+
+    arch = "tiny-resnet"
+    layers = inventory_for(arch)()
+    seed = auto_plan(arch, target_cr=2.0, weight_bits=3, mode="kernel")
+    ep_specs = seed.specs()
+    bits = [3] * len(layers)
+    timer = CountingWall()
+    cm = MeasuredCost(simulator_for(arch), patch=exec_patch_for(arch),
+                      timer=timer, cache_dir=tempfile.mkdtemp())
+
+    analytic, measured, keys = [], [], set()
+    n = len(layers)
+    for k in range(n + 1):
+        specs = ep_specs[:k] + [None] * (n - k)
+        a = cm.analytic.total(layers, specs, bits)
+        m = cm.total(layers, specs, bits)
+        keys |= {cm.layer_key(l, s, b) for l, s, b in
+                 zip(layers, specs, bits)}
+        analytic.append(a)
+        measured.append(m if m is not None else float("nan"))
+        emit(f"kernels/costmodel-k{k}", (m or 0.0) * 1e6,
+             f"epitomized={k}/{n};analytic_ms={a*1e3:.3f};"
+             + (f"measured_ms={m*1e3:.3f}" if m is not None
+                else "measured_ms=n/a"))
+
+    degraded = not cm.available
+    rc = _spearman(analytic, measured) if not degraded else float("nan")
+    timed_once = timer.calls == cm.timings == len(keys)
+    emit("kernels/costmodel-smoke", 0.0,
+         f"candidates={n + 1};rank_corr={rc:.3f};timed={cm.timings};"
+         f"unique_keys={len(keys)};lookups={cm.lookups};"
+         f"timed_once={timed_once};degraded={degraded}")
+    assert timed_once, (
+        f"memoization broke: {timer.calls} timer calls / {cm.timings} "
+        f"recorded timings for {len(keys)} unique keys")
+    assert degraded or rc >= 0.5, (
+        f"simulator-vs-measured Spearman {rc:.3f} < 0.5 — the analytic "
+        f"model no longer ranks like the hardware; recalibrate")
+
+
+def _spearman(a, b) -> float:
+    """Spearman rank correlation (average ranks on ties)."""
+    import numpy as np
+
+    def ranks(v):
+        v = np.asarray(v, float)
+        order = np.argsort(v, kind="stable")
+        r = np.empty(len(v))
+        sv = v[order]
+        i = 0
+        while i < len(v):
+            j = i
+            while j + 1 < len(v) and sv[j + 1] == sv[i]:
+                j += 1
+            r[order[i:j + 1]] = (i + j) / 2.0
+            i = j + 1
+        return r
+    ra, rb = ranks(a), ranks(b)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = float(np.sqrt((ra * ra).sum() * (rb * rb).sum()))
+    return float((ra * rb).sum() / denom) if denom else 0.0

@@ -29,20 +29,21 @@ from repro.pim.xbar import count_crossbars, uniform_epitome_specs, utilization
 def _measured_wall_s(plan, batch: int = 1, hw: int = 32) -> float:
     """Wall time of one jitted forward of the planned model on this host
     (interpret-mode Pallas on CPU — demonstrates the plan executes, not
-    hardware speed).  Compile + warm-up excluded."""
+    hardware speed).  Timed by the autotuner's shared ``wall_timer``
+    (warm-up + best-of-iters), the same clock the MeasuredCost spine and
+    the kernel tuner use, so every measured number in the repo is
+    comparable."""
     import jax
+    from repro.kernels.autotune import wall_timer
     from repro.models.resnet import ResNetModel
     model = ResNetModel.from_plan(plan)
     assert model.specs == plan.specs()
     params = model.prepack(model.init(jax.random.PRNGKey(0)))
     x = jax.random.normal(jax.random.PRNGKey(1), (batch, hw, hw, 3))
     apply = jax.jit(model.apply)
-    jax.block_until_ready(apply(params, x))
-    t0 = time.perf_counter()
-    y = jax.block_until_ready(apply(params, x))
-    wall = time.perf_counter() - t0
+    y = apply(params, x)
     assert bool(np.isfinite(np.asarray(y)).all()), "non-finite logits"
-    return wall
+    return wall_timer(lambda: apply(params, x), 1) * 1e-6
 
 
 def table1(emit) -> None:
@@ -119,15 +120,13 @@ def tiny(emit) -> None:
     sim = simulator_for("tiny-resnet")
     layers = inventory_for("tiny-resnet")()
 
-    # dense anchor
+    # dense anchor (same shared wall_timer as the plan rows below)
+    from repro.kernels.autotune import wall_timer
     model = tiny_resnet(specs=None)
     params = model.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (tc.batch, tc.hw, tc.hw, 3))
     apply = jax.jit(model.apply)
-    jax.block_until_ready(apply(params, x))
-    t0 = time.perf_counter()
-    jax.block_until_ready(apply(params, x))
-    wall_d = time.perf_counter() - t0
+    wall_d = wall_timer(lambda: apply(params, x), 1) * 1e-6
     pred_d = sim.simulate(layers).latency
     emit("tiny/dense", wall_d * 1e6,
          f"pred_ms={pred_d*1e3:.3f};meas_ms={wall_d*1e3:.3f};"

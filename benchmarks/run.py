@@ -11,6 +11,8 @@ Sections:
   kernels  — epitome matmul mode timings + Pallas interpret checks
   autotune — heuristic vs measured-winner kernel blocks (tuned_us <=
              heuristic_us per row; fused-fold pipelined variant in the sweep)
+  costmodel — simulator-vs-measured Spearman rank correlation over a
+             k-sweep of epitomized layers + MeasuredCost memoization gate
   serving  — continuous-batching engine under open-loop Poisson load
   roofline — per (arch x shape) roofline table from the dry-run artifacts
 """
@@ -80,6 +82,9 @@ def main() -> None:
                               kernels_bench.lm_plan(e)),
         # heuristic-vs-tuned block shapes on conv + LM decode geometry
         "autotune": kernels_bench.autotune_blocks,
+        # simulator-vs-measured rank correlation + MeasuredCost memoization
+        # over a k-sweep of epitomized-layer count
+        "costmodel": kernels_bench.costmodel_smoke,
         # sharded serving smoke: meaningful when the process has > 1
         # device (CI forces 8 CPU host devices via XLA_FLAGS)
         "sharded": kernels_bench.sharded_plan,

@@ -136,12 +136,56 @@ def cell_D():
         dr.SERVE_EXPERTS_SLOT_MAJOR = False
 
 
+def cell_E():
+    """Hardware-in-the-loop plan search on the calibrated tiny cell:
+    analytic-scored vs measured-scored evolution search through the shared
+    ``pim.costmodel.MeasuredCost`` machinery (no local timing loops — the
+    same memoized wall_timer path `plan search --measured` uses)."""
+    import tempfile
+
+    from repro.pim.costmodel import measured_cost_for
+    from repro.pim.evo import EvoConfig
+    from repro.pim.plan import legalize_plan, search_plan
+
+    print("== Cell E: tiny-resnet hardware-in-the-loop search ==")
+    evo = EvoConfig(population=8, iterations=4, seed=0)
+    cache = tempfile.mkdtemp(prefix="epim-costmodel-")
+
+    def line(label, plan, cm=None):
+        c = plan.provenance.get("cost") or {}
+        meas = c.get("measured_s")
+        stats = (f" timings={cm.timings} lookups={cm.lookups}"
+                 if cm is not None else "")
+        print(f"  [{label:28s}] analytic={c.get('analytic_s', 0)*1e3:7.3f}ms "
+              f"measured="
+              + (f"{meas*1e3:7.3f}ms" if meas is not None else "    n/a")
+              + stats)
+
+    legal_a = legalize_plan(search_plan(
+        "tiny-resnet", objective="latency", weight_bits=3, evo=evo))
+    cm = measured_cost_for("tiny-resnet", cache_dir=cache)
+    line("E0 analytic-scored search", legalize_plan(legal_a, cost=cm), cm)
+    cm2 = measured_cost_for("tiny-resnet", cache_dir=cache)
+    legal_m = legalize_plan(search_plan(
+        "tiny-resnet", objective="latency", weight_bits=3, evo=evo,
+        cost=cm2, measure_top_k=4), cost=cm2)
+    line("E1 measured-scored search", legal_m, cm2)
+    a = (legal_m.provenance["cost"]["measured_s"]
+         or float("inf"))
+    b = (legalize_plan(legal_a, cost=cm).provenance["cost"]["measured_s"]
+         or float("inf"))
+    print(f"  measured-scored vs analytic-scored wall: "
+          f"{a*1e3:.3f}ms vs {b*1e3:.3f}ms "
+          f"({'win' if a <= b else 'loss'} under the measured metric)")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="all")
     args = ap.parse_args()
     os.makedirs(OUT, exist_ok=True)
-    cells = {"A": cell_A, "B": cell_B, "C": cell_C, "D": cell_D}
+    cells = {"A": cell_A, "B": cell_B, "C": cell_C, "D": cell_D,
+             "E": cell_E}
     for name, fn in cells.items():
         if args.cell in ("all", name):
             fn()

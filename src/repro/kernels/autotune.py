@@ -222,13 +222,20 @@ def tune(spec: EpitomeSpec, bits: int, T: int, *,
     entries = _load_cache(cache_dir, backend)
     hit = entries.get(key)
     if hit is not None and not force:
-        return TuneResult(blocks=(hit["bt"], hit["bk"], hit["bn"]),
-                          fused_fold=hit["fused_fold"],
-                          tuned_us=hit["tuned_us"],
-                          heuristic_us=hit["heuristic_us"],
-                          bit_identical=hit["bit_identical"],
-                          max_err=hit["max_err"], source="cache",
-                          backend=backend, key=key)
+        # a corrupt/partial entry (hand-edited file, interrupted writer,
+        # or a measure/-namespaced record that leaked here) is a cache
+        # MISS — re-time rather than crash or serve garbage blocks
+        try:
+            return TuneResult(blocks=(int(hit["bt"]), int(hit["bk"]),
+                                      int(hit["bn"])),
+                              fused_fold=bool(hit["fused_fold"]),
+                              tuned_us=float(hit["tuned_us"]),
+                              heuristic_us=float(hit["heuristic_us"]),
+                              bit_identical=bool(hit["bit_identical"]),
+                              max_err=float(hit["max_err"]), source="cache",
+                              backend=backend, key=key)
+        except (KeyError, TypeError, ValueError):
+            pass
 
     quant = bits > 0
     qcfg = qcfg if qcfg is not None else (QuantConfig(bits=bits) if quant

@@ -6,6 +6,12 @@ The plan -> legalize -> execute pipeline from the CLI:
   PYTHONPATH=src python -m repro.launch.plan search --arch tiny-resnet \
       --objective latency --weight-bits 3 --out plan.json
 
+  # hardware-in-the-loop: re-rank each generation's elite front by
+  # measured fused-kernel latency (memoized in benchmarks/tuned/) and
+  # emit a legalized plan with analytic + measured cost in provenance
+  PYTHONPATH=src python -m repro.launch.plan search --arch tiny-resnet \
+      --objective latency --weight-bits 3 --measured --out plan.json
+
   # snap the searched specs to the kernel-exact families + re-simulate
   PYTHONPATH=src python -m repro.launch.plan legalize --plan plan.json \
       --out plan_legal.json
@@ -28,6 +34,43 @@ def _load(path: str):
     return EpitomePlan.load(path)
 
 
+def _cost_model(args, arch: str):
+    """The CostModel the --measured flags select (None = analytic default).
+    One builder shared by search and legalize so both score with the same
+    keys and the same benchmarks/tuned/ cache."""
+    if not getattr(args, "measured", False):
+        return None
+    from ..pim.costmodel import measured_cost_for
+    return measured_cost_for(arch, t=args.measure_t,
+                             iters=args.measure_iters,
+                             cache_dir=args.measure_cache or None)
+
+
+def _add_measure_flags(s) -> None:
+    s.add_argument("--measured", action="store_true",
+                   help="hardware-in-the-loop: score by measured "
+                        "fused-kernel latency (memoized per legalized "
+                        "spec/bits/T in the autotuner cache); degrades to "
+                        "analytic with a warning if timing is unavailable")
+    s.add_argument("--measure-t", type=int, default=1,
+                   help="per-image batch assumed when deriving measured T")
+    s.add_argument("--measure-iters", type=int, default=2,
+                   help="timing iterations per measured kernel")
+    s.add_argument("--measure-cache", default="",
+                   help="measurement-cache dir (default: benchmarks/tuned/, "
+                        "shared with legalize --tune)")
+
+
+def _print_cost(plan) -> None:
+    c = plan.provenance.get("cost")
+    if not c:
+        return
+    meas = c.get("measured_s")
+    meas_txt = "n/a (analytic only)" if meas is None else f"{meas*1e3:.3f}ms"
+    print(f"[plan] cost ({c.get('model')}, T base {c.get('t')}): "
+          f"analytic={c['analytic_s']*1e3:.3f}ms measured={meas_txt}")
+
+
 def _fmt_spec(spec) -> str:
     if spec is None:
         return "dense"
@@ -37,12 +80,19 @@ def _fmt_spec(spec) -> str:
 
 def cmd_search(args) -> None:
     from ..pim.evo import EvoConfig
-    from ..pim.plan import search_plan
+    from ..pim.plan import legalize_plan, search_plan
     evo = EvoConfig(population=args.population, iterations=args.iterations,
                     seed=args.seed)
+    cost = _cost_model(args, args.arch)
     plan = search_plan(args.arch, objective=args.objective,
                        weight_bits=args.weight_bits or None,
-                       act_bits=args.act_bits or None, evo=evo)
+                       act_bits=args.act_bits or None, evo=evo,
+                       cost=cost, measure_top_k=args.measure_top_k)
+    if cost is not None:
+        # hardware-in-the-loop output contract: the saved artifact is the
+        # legalized design the measurements were keyed on, with both cost
+        # columns stamped — ready for `run`, no separate legalize step
+        plan = legalize_plan(plan, cost=cost)
     plan.save(args.out)
     pred = plan.predicted
     print(f"[plan] searched {args.arch} ({args.objective}, "
@@ -50,8 +100,19 @@ def cmd_search(args) -> None:
           f"{plan.n_epitomized}/{len(plan.layers)} layers epitomized, "
           f"predicted {pred['latency_s']*1e3:.3f}ms / "
           f"{pred['energy_j']*1e3:.3f}mJ / {pred['xbars']} XBs")
-    print(f"[plan] saved -> {args.out}  (NOT legalized; run "
-          f"`legalize --plan {args.out}` before executing)")
+    if cost is not None:
+        gens = plan.provenance.get("measured_elites") or []
+        n_meas = sum(1 for g in gens if g.get("measured"))
+        print(f"[plan] measured elites: {n_meas}/{len(gens)} generations "
+              f"ranked by wall clock ({cost.timings} timings for "
+              f"{cost.lookups} layer lookups; degraded="
+              f"{not cost.available})")
+        _print_cost(plan)
+        print(f"[plan] saved -> {args.out}  (legalized; ready for "
+              f"`run --plan {args.out}`)")
+    else:
+        print(f"[plan] saved -> {args.out}  (NOT legalized; run "
+              f"`legalize --plan {args.out}` before executing)")
 
 
 def cmd_legalize(args) -> None:
@@ -63,7 +124,8 @@ def cmd_legalize(args) -> None:
         from .mesh import parse_mesh
         data, model = parse_mesh(args.mesh)
         mesh_shape = {"data": data, "model": model}
-    legal = legalize_plan(plan, patch=patch, mesh_shape=mesh_shape)
+    legal = legalize_plan(plan, patch=patch, mesh_shape=mesh_shape,
+                          cost=_cost_model(args, plan.arch))
     if args.tune:
         from ..kernels.autotune import tune_plan
         legal = tune_plan(legal, t=args.tune_t, grid=args.tune_grid,
@@ -82,6 +144,7 @@ def cmd_legalize(args) -> None:
           f"mean={legal.snap_err_mean:.3f}; re-simulated "
           f"{pred['latency_s']*1e3:.3f}ms / {pred['energy_j']*1e3:.3f}mJ / "
           f"{pred['xbars']} XBs")
+    _print_cost(legal)
     fb = legal.provenance.get("placement_fallbacks") or {}
     if fb:
         for name, reasons in fb.items():
@@ -100,14 +163,36 @@ def cmd_show(args) -> None:
         print(f"predicted: latency={p['latency_s']*1e3:.3f}ms "
               f"energy={p['energy_j']*1e3:.3f}mJ xbars={p['xbars']} "
               f"util={p['utilization']*100:.1f}%")
+    # per-layer cost columns when the cost-model provenance is present
+    # (analytic-only plans show the analytic column and '-' for measured)
+    cost = prov.get("cost") or {}
+    by_layer = {l.get("name"): l for l in cost.get("layers", [])
+                if isinstance(l, dict)}
+    tuned = prov.get("tuned_blocks") or {}
+    if cost:
+        _print_cost(plan)
+    cost_hdr = f" {'pred_ms':>8} {'meas_ms':>8} {'src':<6}" if by_layer else ""
+    tuned_hdr = f" {'tuned':<10}" if tuned else ""
     print(f"{'layer':<18} {'bits':>4} {'mode':<11} {'snap':>6} "
-          f"{'placement':<16} spec")
+          f"{'placement':<16}{cost_hdr}{tuned_hdr} spec")
     for lp in plan.layers:
         pl = lp.placement
         where = "-" if pl is None else \
             f"{pl.row_axis or '.'}x{pl.col_axis or '.'}/{pl.scales[:4]}"
+        cols = ""
+        if by_layer:
+            c = by_layer.get(lp.name) or {}
+            a, m = c.get("analytic_s"), c.get("measured_s")
+            cols = (f" {'-' if a is None else f'{a*1e3:8.3f}':>8}"
+                    f" {'-' if m is None else f'{m*1e3:8.3f}':>8}"
+                    f" {c.get('source', '-'):<6}")
+        if tuned:
+            t = tuned.get(lp.name)
+            ttxt = "-" if t is None else (f"{t['bt']}x{t['bk']}x{t['bn']}/"
+                                          f"{t.get('source', '?')[:4]}")
+            cols += f" {ttxt:<10}"
         print(f"{lp.name:<18} {lp.weight_bits or '-':>4} {lp.mode:<11} "
-              f"{lp.snap_err:>6.3f} {where:<16} {_fmt_spec(lp.spec)}")
+              f"{lp.snap_err:>6.3f} {where:<16}{cols} {_fmt_spec(lp.spec)}")
 
 
 def _run_lm(plan, args) -> None:
@@ -225,6 +310,7 @@ def cmd_run(args) -> None:
     print(f"[plan] predicted (PIM simulator): {pred_ms:.3f}ms "
           f"/ {pred.get('energy_j', float('nan'))*1e3:.3f}mJ "
           f"/ {pred.get('xbars', '-')} XBs")
+    _print_cost(plan)
     print(f"[plan] measured  (this host, batch={args.batch} "
           f"hw={args.hw}): {wall*1e3:.1f}ms wall per forward "
           f"(interpret-mode Pallas on CPU measures Python, not hardware)")
@@ -247,6 +333,10 @@ def main() -> None:
     s.add_argument("--iterations", type=int, default=8)
     s.add_argument("--seed", type=int, default=0)
     s.add_argument("--out", default="plan.json")
+    _add_measure_flags(s)
+    s.add_argument("--measure-top-k", type=int, default=4,
+                   help="elite-front size re-ranked by measured latency "
+                        "each generation (--measured only)")
     s.set_defaults(fn=cmd_search)
 
     s = sub.add_parser("legalize",
@@ -269,6 +359,7 @@ def main() -> None:
     s.add_argument("--tune-iters", type=int, default=2)
     s.add_argument("--tune-cache", default="",
                    help="tuning-cache dir (default: benchmarks/tuned/)")
+    _add_measure_flags(s)
     s.set_defaults(fn=cmd_legalize)
 
     s = sub.add_parser("show", help="print a plan")

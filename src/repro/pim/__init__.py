@@ -11,6 +11,9 @@ from .xbar import MappingConfig, count_crossbars, layer_crossbars, make_spec
 from .workloads import (LayerShape, lm_layers, resnet50_layers,
                         resnet101_layers, tiny_resnet_layers)
 from .simulator import PimSimulator, SimResult
+from .costmodel import (AnalyticCost, CostModel, LayerCost, MeasuredCost,
+                        PlanCost, analytic_cost_for, cost_model_for,
+                        measured_cost_for)
 from .evo import EvoConfig, encode_individual, evolution_search
 from .plan import (EpitomePlan, LayerPlan, PlanSchemaError, auto_plan,
                    is_kernel_exact, legalize_plan, legalize_spec,

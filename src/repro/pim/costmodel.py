@@ -1,0 +1,395 @@
+"""Unified CostModel spine: one cost source for plan search AND execution.
+
+The paper's layer-wise design method (Algorithm 1) ranks epitome designs
+against an *analytic* latency model, but PR 5 showed the tiny simulator
+needs calibration against measured walls and PR 8 produces real
+per-(spec, bits, T) fused-kernel timings.  PIMSYN/PIMCOMP-style, this
+module unifies the two cost sources behind one interface so every search
+and every plan artifact can rank by the same numbers the kernels actually
+measure:
+
+  * ``CostModel``     — the interface: per-layer costs, a scalar latency
+                        ``total()`` the search ranks by, and
+                        ``plan_cost()`` for provenance stamping.
+  * ``AnalyticCost``  — wraps ``PimSimulator`` (incl. the TinyCalibration
+                        coefficients): per-layer ``A*R + B*V`` seconds.
+  * ``MeasuredCost``  — wraps the autotuner's timer: per-layer measured
+                        fused-kernel latency, memoized per *legalized*
+                        ``(spec signature, weight_bits, T bucket)`` and
+                        persisted in the ``benchmarks/tuned/`` per-backend
+                        JSON cache (namespaced ``measure/...`` entries),
+                        so identical candidates across search generations
+                        are timed exactly once and measurements are shared
+                        with — and reused from — ``legalize --tune``
+                        winners.  A failing timer degrades to analytic
+                        scoring with a visible warning, never a crash;
+                        corrupt or stale cache entries re-time.
+
+Threading: ``evolution_search(cost=...)`` re-ranks the elite front by
+measured latency each generation (the cheap population tail stays
+analytic, so wall-clock stays sane), ``search_plan``/``legalize_plan``/
+``plan_from_specs`` stamp both analytic and measured per-layer cost into
+``provenance['cost']`` (schema-additive), and ``launch/plan.py search
+--measured`` drives the whole loop from the CLI.
+
+Keying is per-layer ``weight_bits`` (schema v2's ``LayerPlan.weight_bits``
+is already per-layer), so heterogeneous-bit plans score correctly; dense
+layers are timed as a jitted dense matmul at the layer's crossbar-space
+(rows, cols) shape under a ``dense/...`` key.  Searched specs are
+legalized to the kernel-exact families *before* keying/timing: the
+measured score is the latency of the design that will actually run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
+
+from ..core.epitome import EpitomeSpec
+from .simulator import PimSimulator
+from .workloads import LayerShape
+
+# cost-model measurements live in the autotuner's per-backend cache file
+# under this namespace, so they never masquerade as tuned sweep winners
+# (a real tuned winner for the same key IS reused as the measurement —
+# it is the latency the plan will serve at)
+MEASURE_PREFIX = "measure/"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    """One layer's cost under a CostModel, ready for provenance."""
+    name: str
+    analytic_s: float                 # simulator latency, seconds
+    measured_s: Optional[float]       # measured kernel latency; None when
+                                      # the backend is analytic-only or the
+                                      # timer is unavailable
+    key: str = ""                     # memo/cache key ("" for analytic)
+    source: str = "analytic"          # analytic | timed | cache | memo
+
+    def record(self) -> Dict[str, Any]:
+        return {"name": self.name, "analytic_s": float(self.analytic_s),
+                "measured_s": (None if self.measured_s is None
+                               else float(self.measured_s)),
+                "key": self.key, "source": self.source}
+
+
+@dataclasses.dataclass
+class PlanCost:
+    """A whole plan's cost record (what provenance['cost'] stores)."""
+    model: str                        # 'analytic' | 'measured'
+    t: int                            # activation batch the T's derive from
+    layers: List[LayerCost]
+
+    @property
+    def analytic_s(self) -> float:
+        return sum(c.analytic_s for c in self.layers)
+
+    @property
+    def measured_s(self) -> Optional[float]:
+        vals = [c.measured_s for c in self.layers]
+        if any(v is None for v in vals):
+            return None
+        return sum(vals)
+
+    def record(self) -> Dict[str, Any]:
+        m = self.measured_s
+        return {"model": self.model, "t": int(self.t),
+                "analytic_s": float(self.analytic_s),
+                "measured_s": None if m is None else float(m),
+                "layers": [c.record() for c in self.layers]}
+
+
+def _norm_bits(bits, n: int) -> List[Optional[int]]:
+    if bits is None:
+        return [None] * n
+    return list(bits)
+
+
+class CostModel:
+    """Interface every plan-scoring backend implements.
+
+    ``total()`` is the scalar the evolution search ranks by (seconds;
+    ``None`` means this backend cannot score right now — callers degrade
+    to analytic).  ``plan_cost()`` is the provenance form.
+    """
+
+    name = "abstract"
+
+    def layer_costs(self, layers: Sequence[LayerShape],
+                    specs: Sequence[Optional[EpitomeSpec]],
+                    bits=None, *, t: Optional[int] = None,
+                    act_bits: Optional[int] = None,
+                    wrapping: bool = True) -> List[LayerCost]:
+        raise NotImplementedError
+
+    def total(self, layers, specs, bits=None, *, t: Optional[int] = None,
+              act_bits: Optional[int] = None,
+              wrapping: bool = True) -> Optional[float]:
+        raise NotImplementedError
+
+    def plan_cost(self, plan, *, t: Optional[int] = None) -> PlanCost:
+        from .plan import inventory_for
+        layers = inventory_for(plan.arch)()
+        lcs = self.layer_costs(layers, plan.specs(), plan.bits(), t=t,
+                               act_bits=plan.provenance.get("act_bits"))
+        return PlanCost(self.name, t if t is not None else getattr(self, "t", 1),
+                        lcs)
+
+
+class AnalyticCost(CostModel):
+    """The PimSimulator's linear latency model, per layer."""
+
+    name = "analytic"
+
+    def __init__(self, simulator: PimSimulator):
+        self.sim = simulator
+
+    def layer_costs(self, layers, specs, bits=None, *, t=None, act_bits=None,
+                    wrapping=True) -> List[LayerCost]:
+        bits = _norm_bits(bits, len(layers))
+        cs = self.sim.counters(layers, specs, bits, wrapping, act_bits)
+        co = self.sim.coeff
+        return [LayerCost(c.name, float(co.A * c.R + co.B * c.V), None)
+                for c in cs]
+
+    def total(self, layers, specs, bits=None, *, t=None, act_bits=None,
+              wrapping=True) -> float:
+        return sum(c.analytic_s for c in self.layer_costs(
+            layers, specs, bits, act_bits=act_bits, wrapping=wrapping))
+
+
+class MeasuredCost(CostModel):
+    """Measured fused-kernel latency, memoized and cache-persisted.
+
+    Per layer: the searched spec is legalized to the kernel-exact family at
+    ``patch`` (what would actually run), keyed by the autotuner's
+    ``tune_key`` (legalized spec signature, per-layer weight_bits, T
+    bucket), and timed once — first checking the in-process memo, then the
+    ``benchmarks/tuned/<backend>.json`` cache (a tuned sweep winner for the
+    same key is reused directly; otherwise a ``measure/``-namespaced entry),
+    and only then invoking ``timer`` on the jitted kernel.  Dense layers
+    time a jitted dense matmul at (T bucket, rows) x (rows, cols).
+
+    A failing/NaN timer flips ``available`` off with one visible warning;
+    every subsequent lookup returns ``measured_s=None`` immediately so the
+    caller's analytic fallback costs nothing.  Corrupt cache entries are
+    treated as misses and re-timed.
+    """
+
+    name = "measured"
+
+    def __init__(self, simulator: PimSimulator, *,
+                 patch: Tuple[int, int], t: int = 1, iters: int = 2,
+                 timer: Optional[Callable[[Callable[[], Any], int], float]]
+                 = None,
+                 cache_dir: Optional[str] = None, qtile: int = 256):
+        self.analytic = AnalyticCost(simulator)
+        self.sim = simulator
+        self.patch = tuple(patch)
+        self.t = int(t)
+        self.iters = int(iters)
+        self._timer = timer
+        self._cache_dir = cache_dir
+        self.qtile = int(qtile)
+        self.available = True
+        self.timings = 0              # timer invocations (== unique timed keys)
+        self.lookups = 0              # per-layer cost lookups (dedup stat)
+        self._memo: Dict[str, Tuple[Optional[float], str]] = {}
+
+    # -- keying --------------------------------------------------------------
+    def _layer_T(self, layer: LayerShape, t: Optional[int]) -> int:
+        """Activation rows a layer's kernel sees: conv layers run their
+        im2col row count per image (t * out_hw^2), fc/LM projections the
+        decode batch — exactly ``kernels.autotune.tune_plan``'s convention,
+        so keys line up with ``legalize --tune`` entries."""
+        t = self.t if t is None else int(t)
+        return t * layer.rounds if layer.kind == "conv" else max(1, t)
+
+    def _resolve(self, layer: LayerShape, spec: Optional[EpitomeSpec],
+                 t: Optional[int]) -> Tuple[Optional[EpitomeSpec], int]:
+        """(legalized spec | None, T) for one layer.  Legalizing before
+        keying is what dedupes 'identical candidates': two searched specs
+        snapping to the same kernel-exact family share one timing."""
+        from .plan import legalize_spec
+        T = self._layer_T(layer, t)
+        legal = None
+        if spec is not None:
+            legal, _ = legalize_spec(layer, spec, self.patch)
+        return legal, T
+
+    def _key_of(self, layer: LayerShape, legal: Optional[EpitomeSpec],
+                bits: Optional[int], T: int) -> str:
+        from ..kernels.autotune import t_bucket, tune_key
+        if legal is None:
+            return (f"dense/M{layer.rows}-N{layer.cols}"
+                    f"/b{int(bits or 0)}/T{t_bucket(T)}")
+        return tune_key(legal, int(bits or 0), T)
+
+    def layer_key(self, layer: LayerShape, spec: Optional[EpitomeSpec],
+                  bits: Optional[int], *, t: Optional[int] = None) -> str:
+        """The memo/cache key of one (layer, spec, weight_bits) — public so
+        tests and tools can assert keying (e.g. that per-layer bits from
+        LayerPlan distinguish heterogeneous-bit plans)."""
+        legal, T = self._resolve(layer, spec, t)
+        return self._key_of(layer, legal, bits, T)
+
+    # -- timing --------------------------------------------------------------
+    def _timer_fn(self):
+        if self._timer is not None:
+            return self._timer
+        from ..kernels.autotune import wall_timer
+        return wall_timer
+
+    def _cache_dir_resolved(self) -> str:
+        if self._cache_dir is not None:
+            return self._cache_dir
+        from ..kernels.autotune import default_cache_dir
+        return default_cache_dir()
+
+    def _build_runner(self, layer: LayerShape,
+                      legal: Optional[EpitomeSpec],
+                      bits: Optional[int], T: int) -> Callable[[], Any]:
+        import jax
+        import jax.numpy as jnp
+        from ..core.quant import QuantConfig
+        from ..kernels import ops
+        from ..kernels.autotune import _synthetic_case, t_bucket
+        Tb = t_bucket(T)
+        if legal is None:
+            key = jax.random.PRNGKey(layer.rows * 1000003 + layer.cols)
+            kx, kw = jax.random.split(key)
+            x = jax.random.normal(kx, (Tb, layer.rows), jnp.float32) \
+                * (layer.rows ** -0.5)
+            W = jax.random.normal(kw, (layer.rows, layer.cols), jnp.float32)
+            return jax.jit(lambda: x @ W)
+        x, E = _synthetic_case(legal, Tb)
+        if bits:
+            packed = ops.pack_epitome(E, legal, QuantConfig(bits=int(bits),
+                                                            tile=self.qtile))
+            return jax.jit(lambda: ops.quant_epitome_matmul(
+                x, None, legal, packed=packed))
+        return jax.jit(lambda: ops.epitome_matmul(x, E, legal))
+
+    def _degrade(self, exc: BaseException) -> None:
+        if self.available:
+            warnings.warn(
+                f"measured cost unavailable ({exc!r}); degrading to "
+                f"analytic scoring — plans still legalize and run, their "
+                f"provenance records measured_s=null", stacklevel=3)
+        self.available = False
+
+    def _measure(self, layer: LayerShape, legal: Optional[EpitomeSpec],
+                 bits: Optional[int], T: int,
+                 key: str) -> Tuple[Optional[float], str]:
+        """Measured microseconds for one key (None when unavailable)."""
+        self.lookups += 1
+        hit = self._memo.get(key)
+        if hit is not None:
+            us, src = hit
+            return us, ("memo" if src == "timed" else src)
+        if not self.available:
+            self._memo[key] = (None, "analytic")
+            return None, "analytic"
+
+        from ..kernels import autotune
+        import jax
+        backend = jax.default_backend()
+        cache_dir = self._cache_dir_resolved()
+        entries = autotune._load_cache(cache_dir, backend)
+        us = _cached_tuned_us(entries, key)
+        if us is None:
+            us = _cached_measure_us(entries, MEASURE_PREFIX + key)
+        if us is not None:
+            self._memo[key] = (us, "cache")
+            return us, "cache"
+
+        try:
+            fn = self._build_runner(layer, legal, bits, T)
+            us = float(self._timer_fn()(fn, self.iters))
+            if not us == us or us in (float("inf"), float("-inf")):
+                raise ValueError(f"timer returned {us!r}")
+        except Exception as exc:           # noqa: BLE001 — degrade, don't die
+            self._degrade(exc)
+            self._memo[key] = (None, "analytic")
+            return None, "analytic"
+        self.timings += 1
+        # persist (re-read first: concurrent tuners/cost models share the file)
+        entries = autotune._load_cache(cache_dir, backend)
+        entries[MEASURE_PREFIX + key] = {"us": us, "kind": "costmodel"}
+        try:
+            autotune._save_cache(cache_dir, backend, entries)
+        except OSError:
+            pass                            # read-only FS: memo still works
+        self._memo[key] = (us, "timed")
+        return us, "timed"
+
+    # -- CostModel interface -------------------------------------------------
+    def layer_costs(self, layers, specs, bits=None, *, t=None, act_bits=None,
+                    wrapping=True) -> List[LayerCost]:
+        bits = _norm_bits(bits, len(layers))
+        base = self.analytic.layer_costs(layers, specs, bits,
+                                         act_bits=act_bits, wrapping=wrapping)
+        out: List[LayerCost] = []
+        for l, s, b, a in zip(layers, specs, bits, base):
+            legal, T = self._resolve(l, s, t)
+            key = self._key_of(l, legal, b, T)
+            us, source = self._measure(l, legal, b, T, key)
+            out.append(LayerCost(l.name, a.analytic_s,
+                                 None if us is None else us * 1e-6,
+                                 key, source))
+        return out
+
+    def total(self, layers, specs, bits=None, *, t=None, act_bits=None,
+              wrapping=True) -> Optional[float]:
+        lcs = self.layer_costs(layers, specs, bits, t=t, act_bits=act_bits,
+                               wrapping=wrapping)
+        vals = [c.measured_s for c in lcs]
+        if any(v is None for v in vals):
+            return None
+        return sum(vals)
+
+
+def _cached_tuned_us(entries: Dict[str, Any], key: str) -> Optional[float]:
+    """A prior autotune sweep winner's latency for this exact key, or None.
+    Corrupt/partial entries are misses, never crashes."""
+    try:
+        us = float(entries[key]["tuned_us"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    return us if us == us and us != float("inf") else None
+
+
+def _cached_measure_us(entries: Dict[str, Any], key: str) -> Optional[float]:
+    try:
+        us = float(entries[key]["us"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    return us if us == us and us != float("inf") else None
+
+
+# ---------------------------------------------------------------------------
+# Factories — the arch-default backends launch/plan.py and tests build
+# ---------------------------------------------------------------------------
+def analytic_cost_for(arch: str) -> AnalyticCost:
+    from .plan import simulator_for
+    return AnalyticCost(simulator_for(arch))
+
+
+def measured_cost_for(arch: str, *, t: int = 1, iters: int = 2,
+                      timer=None, cache_dir: Optional[str] = None
+                      ) -> MeasuredCost:
+    from .plan import exec_patch_for, simulator_for
+    return MeasuredCost(simulator_for(arch), patch=exec_patch_for(arch),
+                        t=t, iters=iters, timer=timer, cache_dir=cache_dir)
+
+
+def cost_model_for(arch: str, kind: str = "analytic", **kw) -> CostModel:
+    """'analytic' | 'measured' backend for an arch (the ``--measured``
+    CLI switch resolves here)."""
+    if kind == "analytic":
+        return analytic_cost_for(arch)
+    if kind == "measured":
+        return measured_cost_for(arch, **kw)
+    raise ValueError(f"unknown cost model {kind!r}; "
+                     "expected 'analytic' or 'measured'")

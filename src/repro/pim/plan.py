@@ -40,6 +40,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 from ..core.epitome import EpitomeSpec
 from ..core.placement import (LayerPlacement, MESH_AXES, SCALE_MODES,
                               default_placement, snap_placement)
+from .costmodel import AnalyticCost, CostModel
 from .evo import EvoConfig, candidate_specs, evolution_search
 from .simulator import (PimSimulator, SimResult, default_calibrated_simulator,
                         tiny_calibrated_simulator)
@@ -523,14 +524,17 @@ def legalize_plan(plan: EpitomePlan, *,
                   patch: Optional[Tuple[int, int]] = None,
                   simulator: Optional[PimSimulator] = None,
                   wrapping: bool = True,
-                  mesh_shape: Optional[Dict[str, int]] = None) -> EpitomePlan:
+                  mesh_shape: Optional[Dict[str, int]] = None,
+                  cost: Optional[CostModel] = None) -> EpitomePlan:
     """The legalization pass: every spec snaps to a kernel-exact family,
     per-layer snap errors are recorded, and the cost is re-simulated so the
     plan's prediction describes the design that will actually run.  Layers
     missing a placement gain the role-based default; with ``mesh_shape``
     (axis name -> size) the placements are additionally snapped to the
     divisibility constraints of the legalized specs (reported fallbacks in
-    provenance)."""
+    provenance).  ``provenance['cost']`` records the per-layer cost under
+    ``cost`` (default: the analytic simulator; pass a ``MeasuredCost`` to
+    record measured fused-kernel latency next to the analytic numbers)."""
     layers = inventory_for(plan.arch)()
     patch = tuple(patch or exec_patch_for(plan.arch))
     out: List[LayerPlan] = []
@@ -549,12 +553,23 @@ def legalize_plan(plan: EpitomePlan, *,
     legal_plan.predicted = sim.simulate_plan(
         legal_plan, wrapping=wrapping,
         act_bits=plan.provenance.get("act_bits")).summary()
+    _stamp_cost(legal_plan, cost or AnalyticCost(sim))
     return legal_plan
 
 
 # ---------------------------------------------------------------------------
 # Planners — every design path emits an EpitomePlan
 # ---------------------------------------------------------------------------
+def _stamp_cost(plan: EpitomePlan, cost: CostModel) -> EpitomePlan:
+    """Record a plan's per-layer cost under ``cost`` into
+    ``provenance['cost']`` (schema-additive: provenance is free-form).
+    Under ``AnalyticCost`` the record's ``measured_s`` fields are null;
+    under ``MeasuredCost`` both columns are real numbers — the artifact
+    always shows predicted and (when available) measured side by side."""
+    plan.provenance["cost_model"] = cost.name
+    plan.provenance["cost"] = cost.plan_cost(plan).record()
+    return plan
+
 def plan_conv_specs(layers: Sequence[LayerShape], target_cr: float = 2.0,
                     patch: Tuple[int, int] = (8, 8)
                     ) -> List[Optional[EpitomeSpec]]:
@@ -587,9 +602,12 @@ def plan_from_specs(arch: str, specs: Sequence[Optional[EpitomeSpec]], *,
                     act_bits: Optional[int] = None, wrapping: bool = True,
                     provenance: Optional[Dict[str, Any]] = None,
                     placements: Optional[Sequence[Optional[LayerPlacement]]]
-                    = None) -> EpitomePlan:
+                    = None,
+                    cost: Optional[CostModel] = None) -> EpitomePlan:
     """Wrap a bare spec list into a plan: provenance + simulated cost.
-    Placement defaults to the role-based serving layout per layer."""
+    Placement defaults to the role-based serving layout per layer.
+    ``provenance['cost']`` records per-layer analytic (and, with a
+    ``MeasuredCost``, measured) latency."""
     layers = inventory_for(arch)()
     if len(specs) != len(layers):
         raise ValueError(f"{len(specs)} specs for {len(layers)} layers")
@@ -607,7 +625,7 @@ def plan_from_specs(arch: str, specs: Sequence[Optional[EpitomeSpec]], *,
     sim = simulator or simulator_for(arch)
     plan.predicted = sim.simulate_plan(plan, wrapping=wrapping,
                                        act_bits=act_bits).summary()
-    return plan
+    return _stamp_cost(plan, cost or AnalyticCost(sim))
 
 
 def uniform_plan(arch: str, m: int = 1024, n: int = 256, *,
@@ -649,13 +667,22 @@ def search_plan(arch: str, *, objective: str = "latency",
                 budget_xbars: Optional[int] = None,
                 evo: Optional[EvoConfig] = None, mode: str = "kernel",
                 simulator: Optional[PimSimulator] = None,
-                seed_plan: Optional[EpitomePlan] = None) -> EpitomePlan:
+                seed_plan: Optional[EpitomePlan] = None,
+                cost: Optional[CostModel] = None,
+                measure_top_k: int = 4) -> EpitomePlan:
     """Algorithm-1 evolution search, emitted as a plan.
 
     Seeds {P}_0 with ``seed_plan`` (default: the auto_plan design, which
     also sets the crossbar budget so the search optimizes cost at matched
     area).  The searched specs are generally NOT kernel-exact — run the
-    result through ``legalize_plan`` before executing it."""
+    result through ``legalize_plan`` before executing it.
+
+    ``cost`` (a ``MeasuredCost``) switches on hardware-in-the-loop mode:
+    each generation's elite front (top ``measure_top_k`` feasible designs)
+    is re-ranked by measured fused-kernel latency, the winner is the
+    measured-best elite across generations, and provenance additionally
+    records ``cost_model``, the per-generation ``measured_elites`` log, and
+    the winning plan's per-layer analytic+measured ``cost``."""
     layers = inventory_for(arch)()
     sim = simulator or simulator_for(arch)
     cfg = dataclasses.replace(evo or EvoConfig(), objective=objective)
@@ -676,19 +703,29 @@ def search_plan(arch: str, *, objective: str = "latency",
     wb = None if weight_bits is None else [weight_bits] * len(layers)
     if budget_xbars is None:
         budget_xbars = count_crossbars(layers, sim.mapping, seed_specs, wb)
+    elite_log: Optional[List[Dict[str, Any]]] = \
+        [] if cost is not None else None
     best, simres, curve = evolution_search(
         layers, cands, sim, budget_xbars, cfg, weight_bits=wb,
-        seeds=[seed_specs], act_bits=act_bits)
-    return EpitomePlan(
+        seeds=[seed_specs], act_bits=act_bits, cost=cost,
+        measure_top_k=measure_top_k, elite_log=elite_log)
+    provenance = {"planner": "evolution_search", "objective": cfg.objective,
+                  "seed": cfg.seed, "population": cfg.population,
+                  "iterations": cfg.iterations,
+                  "budget_xbars": int(budget_xbars),
+                  "act_bits": act_bits, "shapes": [list(s) for s in shapes],
+                  "best_curve": [float(r) for r in curve],
+                  "legalized": False}
+    if cost is not None:
+        provenance["cost_model"] = cost.name
+        provenance["measured_elites"] = elite_log
+    plan = EpitomePlan(
         arch=arch,
         layers=[LayerPlan(l.name, s, weight_bits, mode,
                           placement=default_placement(l.name))
                 for l, s in zip(layers, best)],
-        provenance={"planner": "evolution_search", "objective": cfg.objective,
-                    "seed": cfg.seed, "population": cfg.population,
-                    "iterations": cfg.iterations,
-                    "budget_xbars": int(budget_xbars),
-                    "act_bits": act_bits, "shapes": [list(s) for s in shapes],
-                    "best_curve": [float(r) for r in curve],
-                    "legalized": False},
+        provenance=provenance,
         predicted=simres.summary())
+    if cost is not None:
+        _stamp_cost(plan, cost)
+    return plan

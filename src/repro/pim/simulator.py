@@ -267,25 +267,21 @@ def calibrate_tiny_coefficients(batch: int = 2, hw: int = 16, iters: int = 5):
     Returns a ``tables.TinyCalibration``; bake it into pim/tables.py to
     persist (constants are stored, not re-measured, so plans stay
     deterministic across hosts)."""
-    import time
-
     import jax
     import numpy as np
 
     from .tables import TinyCalibration
     from .plan import auto_plan
     from .workloads import tiny_resnet_layers
+    from ..kernels.autotune import wall_timer
     from ..models.resnet import ResNetModel, tiny_resnet
 
     def wall(model, params) -> float:
+        # the shared autotuner clock (warm-up + best-of-iters), so the
+        # calibration anchors use the same timer as MeasuredCost and tune()
         x = jax.random.normal(jax.random.PRNGKey(1), (batch, hw, hw, 3))
         apply = jax.jit(model.apply)
-        jax.block_until_ready(apply(params, x))
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            y = apply(params, x)
-        jax.block_until_ready(y)
-        return (time.perf_counter() - t0) / iters
+        return wall_timer(lambda: apply(params, x), iters) * 1e-6
 
     dense = tiny_resnet(specs=None)
     t_dense = wall(dense, dense.init(jax.random.PRNGKey(0)))

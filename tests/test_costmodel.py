@@ -1,0 +1,362 @@
+"""The unified CostModel spine: analytic/measured backends, per-layer
+weight_bits keying, memoization (one timing per unique key), cache reuse
+with the autotuner, graceful degradation on timer failure, and deterministic
+hardware-in-the-loop search."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.kernels import autotune
+from repro.pim.costmodel import (AnalyticCost, MeasuredCost,
+                                 cost_model_for, measured_cost_for)
+from repro.pim.evo import EvoConfig
+from repro.pim.plan import (auto_plan, inventory_for, legalize_plan,
+                            legalize_spec, search_plan, simulator_for,
+                            validate_plan_dict)
+
+ARCH = "tiny-resnet"
+EVO = EvoConfig(population=8, iterations=3, seed=0)
+
+
+class CountingTimer:
+    """Deterministic fake wall clock: returns a fixed function of the call
+    index and never executes the kernel, so these tests assert memoization
+    and determinism without paying for interpret-mode Pallas."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def __call__(self, fn, iters):
+        us = 100.0 + self.calls
+        self.calls += 1
+        return us
+
+
+class FailingTimer:
+    def __call__(self, fn, iters):
+        raise RuntimeError("no clock on this host")
+
+
+def _cm(tmp_path, timer=None, **kw):
+    return measured_cost_for(ARCH, timer=timer or CountingTimer(),
+                             cache_dir=str(tmp_path), **kw)
+
+
+def _setup():
+    layers = inventory_for(ARCH)()
+    plan = auto_plan(ARCH, target_cr=2.0, weight_bits=3, mode="kernel")
+    return layers, plan
+
+
+class TestKeys:
+    def test_per_layer_bits_distinguish_keys(self, tmp_path):
+        """Satellite contract: two plans differing only in ONE layer's
+        weight_bits get a different measured key for that layer and
+        identical keys everywhere else."""
+        layers, plan = _setup()
+        cm = _cm(tmp_path)
+        other = dataclasses.replace(
+            plan, layers=[dataclasses.replace(lp, weight_bits=5) if i == 2
+                          else lp for i, lp in enumerate(plan.layers)])
+        k_a = [cm.layer_key(l, s, b) for l, s, b in
+               zip(layers, plan.specs(), plan.bits())]
+        k_b = [cm.layer_key(l, s, b) for l, s, b in
+               zip(layers, other.specs(), other.bits())]
+        assert k_a[2] != k_b[2]
+        assert "/b3/" in k_a[2] and "/b5/" in k_b[2]
+        for i in (0, 1, 3, 4, 5, 6, 7, 8):
+            assert k_a[i] == k_b[i]
+
+    def test_key_is_on_the_legalized_spec(self, tmp_path):
+        """Two searched specs that snap to the same kernel-exact family
+        share one key — 'identical candidates' means identical after
+        legalization, which is what actually runs."""
+        from repro.core.epitome import EpitomeSpec
+        layers, _ = _setup()
+        cm = _cm(tmp_path)
+        l = next(x for x in layers if x.rows >= 16)
+        a = EpitomeSpec(M=l.rows, N=l.cols, m=8, n=8, bm=8, bn=8)
+        b = EpitomeSpec(M=l.rows, N=l.cols, m=9, n=8, bm=8, bn=8)
+        la, _ = legalize_spec(l, a, cm.patch)
+        lb, _ = legalize_spec(l, b, cm.patch)
+        if la == lb:                    # snap collision is the point
+            assert cm.layer_key(l, a, 3) == cm.layer_key(l, b, 3)
+        assert cm.layer_key(l, a, 3) == autotune.tune_key(
+            la, 3, cm._layer_T(l, None))
+
+    def test_dense_layers_have_bits_aware_keys(self, tmp_path):
+        layers, _ = _setup()
+        cm = _cm(tmp_path)
+        l = layers[0]
+        k0 = cm.layer_key(l, None, None)
+        k3 = cm.layer_key(l, None, 3)
+        assert k0.startswith("dense/") and k3.startswith("dense/")
+        assert k0 != k3
+
+    def test_conv_T_matches_autotune_convention(self, tmp_path):
+        """Per-layer T derives exactly as kernels.autotune.tune_plan's:
+        conv layers run t * rounds rows, fc layers the decode batch — so
+        MeasuredCost keys line up with legalize --tune cache entries."""
+        layers, _ = _setup()
+        cm = _cm(tmp_path, t=2)
+        conv = next(l for l in layers if l.kind == "conv")
+        fc = next(l for l in layers if l.kind != "conv")
+        assert cm._layer_T(conv, None) == 2 * conv.rounds
+        assert cm._layer_T(fc, None) == 2
+
+
+class TestAnalytic:
+    def test_total_matches_simulator(self):
+        layers, plan = _setup()
+        ac = AnalyticCost(simulator_for(ARCH))
+        total = ac.total(layers, plan.specs(), plan.bits())
+        assert total == pytest.approx(plan.predicted["latency_s"])
+
+    def test_plan_cost_is_json_native_with_null_measured(self):
+        _, plan = _setup()
+        rec = AnalyticCost(simulator_for(ARCH)).plan_cost(plan).record()
+        assert json.loads(json.dumps(rec)) == rec
+        assert rec["model"] == "analytic"
+        assert rec["measured_s"] is None
+        assert all(l["measured_s"] is None for l in rec["layers"])
+        assert rec["analytic_s"] == pytest.approx(
+            sum(l["analytic_s"] for l in rec["layers"]))
+
+    def test_cost_model_for_dispatch(self, tmp_path):
+        assert cost_model_for(ARCH).name == "analytic"
+        assert cost_model_for(ARCH, "measured",
+                              cache_dir=str(tmp_path)).name == "measured"
+        with pytest.raises(ValueError):
+            cost_model_for(ARCH, "vibes")
+
+
+class TestMemoization:
+    def test_duplicate_lookups_timed_once(self, tmp_path):
+        """The tentpole's economic contract: N identical candidates cost
+        one timing, within a call and across calls."""
+        layers, plan = _setup()
+        timer = CountingTimer()
+        cm = _cm(tmp_path, timer=timer)
+        c1 = cm.plan_cost(plan)
+        n = timer.calls
+        unique = {c.key for c in c1.layers}
+        assert n == len(unique) == cm.timings
+        c2 = cm.plan_cost(plan)                      # same candidates again
+        assert timer.calls == n                      # zero new timings
+        assert c2.measured_s == pytest.approx(c1.measured_s)
+        assert all(c.source == "memo" for c in c2.layers)
+
+    def test_cache_persists_across_instances(self, tmp_path):
+        layers, plan = _setup()
+        cm1 = _cm(tmp_path)
+        cm1.plan_cost(plan)
+        assert cm1.timings > 0
+        t2 = CountingTimer()
+        cm2 = _cm(tmp_path, timer=t2)                # same cache dir
+        c = cm2.plan_cost(plan)
+        assert t2.calls == cm2.timings == 0          # fully cache-served
+        assert all(lc.source == "cache" for lc in c.layers
+                   if lc.measured_s is not None)
+
+    def test_reuses_autotune_winner_without_retiming(self, tmp_path):
+        """A tuned sweep winner under the plain tune_key IS the measured
+        latency for that key — the cost model reads it instead of timing
+        the kernel again."""
+        layers, plan = _setup()
+        cm = _cm(tmp_path)
+        l, s, b = layers[0], plan.specs()[0], 3
+        key = cm.layer_key(l, s, b)
+        backend = __import__("jax").default_backend()
+        entries = autotune._load_cache(str(tmp_path), backend)
+        entries[key] = {"bt": 8, "bk": 8, "bn": 8, "fused_fold": False,
+                        "tuned_us": 42.0, "heuristic_us": 50.0,
+                        "bit_identical": True, "max_err": 0.0,
+                        "T": 8, "source": "timed"}
+        autotune._save_cache(str(tmp_path), backend, entries)
+        costs = cm.layer_costs([l], [s], [b])
+        assert costs[0].source == "cache"
+        assert costs[0].measured_s == pytest.approx(42.0e-6)
+        assert cm.timings == 0
+
+
+class TestRobustness:
+    def test_failing_timer_degrades_with_warning(self, tmp_path):
+        """Satellite contract: a dead clock means analytic scoring plus a
+        visible warning — never a crash, and the search still emits a
+        valid legalized plan."""
+        cm = _cm(tmp_path, timer=FailingTimer())
+        with pytest.warns(UserWarning, match="degrading to analytic"):
+            plan = search_plan(ARCH, objective="latency", weight_bits=3,
+                               evo=EVO, cost=cm, measure_top_k=2)
+        assert not cm.available
+        gens = plan.provenance["measured_elites"]
+        assert gens and all(not g["measured"] for g in gens)
+        legal = legalize_plan(plan, cost=cm)
+        assert legal.is_legalized()
+        rec = legal.provenance["cost"]
+        assert rec["measured_s"] is None
+        assert all(l["analytic_s"] > 0 for l in rec["layers"])
+        validate_plan_dict(json.loads(legal.to_json()))
+
+    def test_degraded_matches_pure_analytic_search(self, tmp_path):
+        """Degraded hardware-in-the-loop search returns exactly what the
+        analytic search would have (same seed, same population)."""
+        cm = _cm(tmp_path, timer=FailingTimer())
+        with pytest.warns(UserWarning):
+            a = search_plan(ARCH, objective="latency", weight_bits=3,
+                            evo=EVO, cost=cm)
+        b = search_plan(ARCH, objective="latency", weight_bits=3, evo=EVO)
+        assert a.specs() == b.specs()
+        assert a.provenance["best_curve"] == b.provenance["best_curve"]
+
+    def test_corrupt_measure_entry_retimes(self, tmp_path):
+        layers, plan = _setup()
+        cm1 = _cm(tmp_path)
+        cm1.plan_cost(plan)
+        backend = __import__("jax").default_backend()
+        entries = autotune._load_cache(str(tmp_path), backend)
+        for k in list(entries):
+            entries[k] = {"us": "not-a-number"}
+        autotune._save_cache(str(tmp_path), backend, entries)
+        t = CountingTimer()
+        cm2 = _cm(tmp_path, timer=t)
+        c = cm2.plan_cost(plan)
+        assert c.measured_s is not None              # re-timed, no crash
+        assert t.calls == cm2.timings > 0
+
+    def test_corrupt_tuned_entry_retunes(self, tmp_path):
+        """The autotuner's own cache-hit path survives a corrupt entry:
+        treated as a miss, re-timed."""
+        from repro.core.epitome import EpitomeSpec
+        spec = EpitomeSpec(M=512, N=512, m=256, n=512, bm=128, bn=256)
+        timer = CountingTimer()
+        autotune.tune(spec, 3, 8, grid="tiny", timer=timer,
+                      cache_dir=str(tmp_path))
+        backend = __import__("jax").default_backend()
+        key = autotune.tune_key(spec, 3, 8)
+        entries = autotune._load_cache(str(tmp_path), backend)
+        entries[key] = {"bt": 8}                     # partial garbage
+        autotune._save_cache(str(tmp_path), backend, entries)
+        r = autotune.tune(spec, 3, 8, grid="tiny", timer=timer,
+                          cache_dir=str(tmp_path))
+        assert r.source == "timed"                   # miss -> re-timed
+
+    def test_nonfinite_timer_degrades(self, tmp_path):
+        layers, plan = _setup()
+        cm = _cm(tmp_path, timer=lambda fn, iters: float("nan"))
+        with pytest.warns(UserWarning, match="degrading to analytic"):
+            c = cm.plan_cost(plan)
+        assert c.measured_s is None and not cm.available
+
+    def test_measured_requires_latency_objective(self, tmp_path):
+        cm = _cm(tmp_path)
+        with pytest.raises(ValueError, match="latency"):
+            search_plan(ARCH, objective="energy", weight_bits=3,
+                        evo=dataclasses.replace(EVO), cost=cm)
+
+
+class TestMeasuredSearch:
+    def test_elites_timed_once_across_generations(self, tmp_path):
+        """Duplicate (spec, bits, T) candidates across generations hit the
+        memo: total timings == unique keys, lookups >> timings."""
+        timer = CountingTimer()
+        cm = _cm(tmp_path, timer=timer)
+        plan = search_plan(ARCH, objective="latency", weight_bits=3,
+                           evo=EVO, cost=cm, measure_top_k=3)
+        assert timer.calls == cm.timings
+        assert cm.lookups > cm.timings               # memo actually dedupes
+        gens = plan.provenance["measured_elites"]
+        assert len(gens) == EVO.iterations
+        assert all(g["measured"] for g in gens)
+        assert all(e["measured_s"] is not None
+                   for g in gens for e in g["elites"])
+
+    def test_fixed_seed_measured_search_deterministic(self, tmp_path):
+        """Given a deterministic timer, --measured search is a pure
+        function of the seed: same specs, same cost record."""
+        a = search_plan(ARCH, objective="latency", weight_bits=3, evo=EVO,
+                        cost=_cm(tmp_path / "a"), measure_top_k=3)
+        b = search_plan(ARCH, objective="latency", weight_bits=3, evo=EVO,
+                        cost=_cm(tmp_path / "b"), measure_top_k=3)
+        assert a.specs() == b.specs()
+        assert a.provenance["best_curve"] == b.provenance["best_curve"]
+        assert a.provenance["measured_elites"] == \
+            b.provenance["measured_elites"]
+        assert a.provenance["cost"] == b.provenance["cost"]
+
+    def test_winner_is_measured_best_elite(self, tmp_path):
+        """The returned design is the measured-best elite across all
+        generations (not the analytic argmax)."""
+        cm = _cm(tmp_path)
+        plan = search_plan(ARCH, objective="latency", weight_bits=3,
+                           evo=EVO, cost=cm, measure_top_k=3)
+        won = plan.provenance["cost"]["measured_s"]
+        best_logged = min(e["measured_s"]
+                          for g in plan.provenance["measured_elites"]
+                          for e in g["elites"])
+        # the stamped plan re-keys on legalized specs, so compare to the
+        # elite log's floor rather than exact equality
+        assert won <= best_logged * 1.5 + 1e-3
+
+
+class TestProvenance:
+    def test_legalize_stamps_analytic_cost_by_default(self):
+        _, plan = _setup()
+        legal = legalize_plan(plan)
+        rec = legal.provenance["cost"]
+        assert legal.provenance["cost_model"] == "analytic"
+        assert rec["model"] == "analytic" and rec["measured_s"] is None
+        assert len(rec["layers"]) == len(legal.layers)
+        assert rec["analytic_s"] == pytest.approx(
+            legal.predicted["latency_s"])
+
+    def test_measured_plan_round_trips_and_validates(self, tmp_path):
+        cm = _cm(tmp_path)
+        plan = legalize_plan(
+            search_plan(ARCH, objective="latency", weight_bits=3, evo=EVO,
+                        cost=cm, measure_top_k=2), cost=cm)
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        with open(path) as f:
+            d = json.load(f)
+        validate_plan_dict(d)                        # schema-additive
+        rec = d["provenance"]["cost"]
+        assert rec["model"] == "measured"
+        assert rec["measured_s"] is not None
+        assert all(l["analytic_s"] is not None for l in rec["layers"])
+
+    def test_show_prints_cost_columns(self, tmp_path, capsys):
+        """`plan show` renders analytic vs measured per layer (and the
+        aggregate line) when the provenance carries them."""
+        from repro.launch.plan import cmd_show
+        cm = _cm(tmp_path)
+        plan = legalize_plan(auto_plan(ARCH, target_cr=2.0, weight_bits=3,
+                                       mode="kernel"), cost=cm)
+        path = str(tmp_path / "plan.json")
+        plan.save(path)
+        cmd_show(type("A", (), {"plan": path})())
+        out = capsys.readouterr().out
+        assert "pred_ms" in out and "meas_ms" in out
+        assert "cost (measured" in out
+        # analytic-only plans still show, without fabricating a column
+        plain = legalize_plan(auto_plan(ARCH, target_cr=2.0, weight_bits=3,
+                                        mode="kernel"))
+        plain.save(path)
+        cmd_show(type("A", (), {"plan": path})())
+        out = capsys.readouterr().out
+        assert "cost (analytic" in out
+
+    def test_show_prints_tuned_source(self, tmp_path, capsys):
+        from repro.launch.plan import cmd_show
+        plan = legalize_plan(auto_plan(ARCH, target_cr=2.0, weight_bits=3,
+                                       mode="kernel"))
+        tuned = autotune.tune_plan(plan, t=1, grid="tiny",
+                                   timer=CountingTimer(),
+                                   cache_dir=str(tmp_path))
+        path = str(tmp_path / "plan.json")
+        tuned.save(path)
+        cmd_show(type("A", (), {"plan": path})())
+        out = capsys.readouterr().out
+        assert "tuned" in out
+        assert "/time" in out                        # source=timed column
