@@ -89,9 +89,11 @@ def main() -> None:
         # device (CI forces 8 CPU host devices via XLA_FLAGS)
         "sharded": kernels_bench.sharded_plan,
         # continuous-batching engine under Poisson load (TTFT / tok/s),
-        # plus the paged+chunked vs dense long-prompt stall probe
+        # the paged+chunked vs dense long-prompt stall probe, and the
+        # K-fused decode dispatch-amortization A/B
         "serving": lambda e: (serving_bench.serving_smoke(e),
-                              serving_bench.paged_smoke(e)),
+                              serving_bench.paged_smoke(e),
+                              serving_bench.multistep_smoke(e)),
         "roofline": roofline,
     }
     only = set(args.only.split(",")) if args.only else set(sections)

@@ -44,7 +44,7 @@ def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
                 n_requests: int = 6, rate_hz: float = 50.0,
                 prompt_lens=(4, 6, 9, 12), max_new: int = 8,
                 capacity: int = 4, temperature: float = 0.0, seed: int = 0,
-                max_len: int = 48, mesh=None,
+                max_len: int = 48, mesh=None, decode_block: int = 1,
                 check_bit_identity: bool = True) -> dict:
     """Run one open-loop experiment; returns the metrics dict."""
     import jax
@@ -53,7 +53,8 @@ def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
     from repro.launch.engine import EngineConfig, Request
 
     eng = EngineConfig(arch=arch, epitome=epitome, smoke=True, mesh=mesh,
-                       capacity=capacity, max_len=max_len, seed=seed).build()
+                       capacity=capacity, max_len=max_len, seed=seed,
+                       decode_block=decode_block).build()
     rng = np.random.default_rng(seed)
     reqs = [Request(prompt=tuple(int(t) for t in
                                  rng.integers(0, eng.cfg.vocab,
@@ -105,6 +106,9 @@ def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
     qwaits_ms = np.array([c.queue_wait_s for c in comps]) * 1e3
     gaps = [np.diff(c.token_times) for c in comps if len(c.token_times) > 1]
     max_gap_ms = float(max((g.max() for g in gaps), default=0.0)) * 1e3
+    decode_steps = stats["decode_steps"] - base["decode_steps"]
+    # decode tokens = everything after each request's prefill-sampled first
+    decode_tokens = total - len(comps)
     return {
         "arch": arch, "epitome": epitome, "completed": len(comps),
         "p50_ttft_ms": float(np.percentile(ttfts_ms, 50)),
@@ -113,13 +117,82 @@ def run_serving(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
         "tok_s": total / wall, "wall_s": wall,
         "bit_identical": bit_identical,
         "prefill_traces": stats["prefill_traces"],
-        "decode_steps": stats["decode_steps"] - base["decode_steps"],
+        "decode_block": decode_block,
+        "decode_steps": decode_steps,
+        "decode_micro_steps": (stats["decode_micro_steps"]
+                               - base["decode_micro_steps"]),
+        "tokens_per_dispatch": decode_tokens / max(1, decode_steps),
         "slot_reuses": stats["slot_reuses"] - base["slot_reuses"],
         "qwait_p50_ms": float(np.percentile(qwaits_ms, 50)),
         "qwait_p99_ms": float(np.percentile(qwaits_ms, 99)),
         "max_gap_ms": max_gap_ms,
         "pages_hwm": stats["pages_hwm"], "pages_total": stats["pages_total"],
         "page_reuses": stats["page_reuses"],
+    }
+
+
+def run_multistep(*, arch: str = "rwkv6-7b", epitome: str = "kernel-q3",
+                  decode_block: int = 1, capacity: int = 4,
+                  prompt_len: int = 8, max_new: int = 33, max_len: int = 48,
+                  seed: int = 0, check_bit_identity: bool = True) -> dict:
+    """Closed-loop decode-throughput probe for one ``decode_block``.
+
+    Saturates the engine (every slot admitted before the clock starts),
+    then times ONLY the decode drain — so tok/s isolates how dispatch
+    amortization scales with K, with prefill cost out of the window.
+    ``max_new = K*steps + 1`` keeps the steady-state K constant (the +1
+    is the prefill-sampled first token), so a sweep over K measures the
+    same token count through different dispatch granularities."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import serve
+    from repro.launch.engine import EngineConfig, Request
+
+    eng = EngineConfig(arch=arch, epitome=epitome, smoke=True, mesh=None,
+                       capacity=capacity, max_len=max_len, seed=seed,
+                       decode_block=decode_block).build()
+    rng = np.random.default_rng(seed)
+    mk = lambda i: Request(prompt=tuple(int(t) for t in
+                                        rng.integers(0, eng.cfg.vocab,
+                                                     size=prompt_len)),
+                           max_new_tokens=max_new, seed=seed + i)
+    # warm run compiles every program the timed run hits (prefill bucket
+    # plus the decode macro-step at this K and its tail K's)
+    for i in range(capacity):
+        eng.submit(mk(100 + i))
+    eng.drain()
+    base = eng.stats
+
+    reqs = [mk(i) for i in range(capacity)]
+    handles = [eng.submit(r) for r in reqs]     # prefill outside the window
+    t0 = time.perf_counter()
+    eng.drain()
+    wall = time.perf_counter() - t0
+    comps = [h.result() for h in handles]
+
+    bit_identical = None
+    if check_bit_identity:
+        r, c = reqs[0], comps[0]
+        ref, _ = serve.generate(
+            eng.serve_params, eng.cfg,
+            jnp.asarray(np.asarray(r.prompt, np.int32)[None]), max_len,
+            r.max_new_tokens, temperature=r.temperature,
+            key=jax.random.PRNGKey(r.seed))
+        bit_identical = tuple(int(t) for t in np.asarray(ref)[0]) == c.tokens
+
+    stats = eng.stats
+    decode_steps = stats["decode_steps"] - base["decode_steps"]
+    decode_tokens = sum(len(c.tokens) - 1 for c in comps)
+    return {
+        "arch": arch, "epitome": epitome, "decode_block": decode_block,
+        "completed": len(comps),
+        "decode_tok_s": decode_tokens / wall,
+        "decode_steps": decode_steps,
+        "decode_micro_steps": (stats["decode_micro_steps"]
+                               - base["decode_micro_steps"]),
+        "tokens_per_dispatch": decode_tokens / max(1, decode_steps),
+        "decode_traces": stats["decode_traces"],
+        "bit_identical": bit_identical,
     }
 
 
@@ -222,8 +295,30 @@ def serving_smoke(emit) -> None:
          f"qwait_p50_ms={m['qwait_p50_ms']:.1f};"
          f"qwait_p99_ms={m['qwait_p99_ms']:.1f};"
          f"max_gap_ms={m['max_gap_ms']:.1f};"
+         f"decode_steps={m['decode_steps']};"
+         f"tokens_per_dispatch={m['tokens_per_dispatch']:.2f};"
          f"pages_hwm={m['pages_hwm']};"
          f"pages_total={m['pages_total']}")
+
+
+def multistep_smoke(emit) -> None:
+    """benchmarks.run section: K=4 fused decode vs K=1, closed loop.  CI
+    gates bit_identical=True (K=4 engine tokens == one-shot generate) and
+    speedup >= 1.5 (dispatch amortization must actually pay on the smoke
+    LM, where per-dispatch overhead dominates the tiny compute)."""
+    one = run_multistep(decode_block=1)
+    four = run_multistep(decode_block=4)
+    speedup = four["decode_tok_s"] / max(one["decode_tok_s"], 1e-9)
+    emit("kernels/serving-multistep-smoke",
+         1e6 / max(four["decode_tok_s"], 1e-9),     # us per decode token
+         f"bit_identical={bool(one['bit_identical'] and four['bit_identical'])};"
+         f"tok_s_k1={one['decode_tok_s']:.1f};"
+         f"tok_s_k4={four['decode_tok_s']:.1f};"
+         f"speedup={speedup:.2f};"
+         f"decode_steps_k1={one['decode_steps']};"
+         f"decode_steps_k4={four['decode_steps']};"
+         f"tokens_per_dispatch_k4={four['tokens_per_dispatch']:.2f};"
+         f"decode_traces_k4={four['decode_traces']}")
 
 
 def paged_smoke(emit) -> None:
@@ -258,11 +353,29 @@ def main() -> None:
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-block", default="1",
+                    help="decode micro-steps fused per dispatch; a comma "
+                         "list (e.g. 1,2,4,8) runs the closed-loop sweep "
+                         "and prints one CSV row per K")
     args = ap.parse_args()
+    blocks = [int(k) for k in str(args.decode_block).split(",")]
+    if len(blocks) > 1:
+        print("decode_block,decode_steps,decode_micro_steps,"
+              "tokens_per_dispatch,decode_tok_s,bit_identical")
+        for k in blocks:
+            m = run_multistep(arch=args.arch, epitome=args.epitome,
+                              decode_block=k, capacity=args.capacity,
+                              seed=args.seed)
+            print(f"{m['decode_block']},{m['decode_steps']},"
+                  f"{m['decode_micro_steps']},"
+                  f"{m['tokens_per_dispatch']:.2f},"
+                  f"{m['decode_tok_s']:.1f},{m['bit_identical']}")
+        return
     m = run_serving(arch=args.arch, epitome=args.epitome,
                     n_requests=args.requests, rate_hz=args.rate,
                     max_new=args.max_new_tokens, capacity=args.capacity,
-                    temperature=args.temperature, seed=args.seed)
+                    temperature=args.temperature, seed=args.seed,
+                    decode_block=blocks[0])
     print(f"[serving] {m['arch']} epitome={m['epitome']}: "
           f"completed={m['completed']} in {m['wall_s']:.2f}s "
           f"({m['tok_s']:.1f} tok/s)")
@@ -275,6 +388,9 @@ def main() -> None:
           f"p99={m['qwait_p99_ms']:.1f}ms; "
           f"max inter-token gap {m['max_gap_ms']:.1f}ms; "
           f"pages hwm={m['pages_hwm']}/{m['pages_total']}")
+    print(f"[serving] decode_block={m['decode_block']} "
+          f"device_steps={m['decode_steps']} "
+          f"tokens_per_dispatch={m['tokens_per_dispatch']:.2f}")
     print(f"[serving] bit_identical={m['bit_identical']}")
 
 

@@ -331,13 +331,50 @@ def _dispatch_epitome_matmul(params: dict, x: Array, cfg: EpLayerConfig) -> Arra
     raise ValueError(f"unknown mode {cfg.mode}")
 
 
+def exact_dot(x: Array, W: Array) -> Array:
+    """``x @ W.astype(x.dtype)`` with geometry-independent bits.
+
+    For low-precision compute dtypes the obvious formulation is NOT
+    reproducible across SPMD geometries on the CPU backend: XLA emits a
+    different bf16-dot kernel (and elides the f32->bf16 operand rounding
+    under allow-excess-precision) depending on whether the module is
+    partitioned, so the same dot drifts ~1e-2 between a single-device and
+    a meshed compile even with every operand and result pinned replicated.
+    Rounding both operands to the compute dtype behind an
+    optimization_barrier (so the rounding can't be folded away) and then
+    accumulating in float32 picks one kernel in every geometry — measured
+    bit-exact single-device vs 2x4 mesh, which the serving cross-geometry
+    contract depends on.  float32 (and wider) inputs take the plain dot,
+    which is already deterministic across geometries."""
+    if jnp.issubdtype(x.dtype, jnp.floating) and \
+            jnp.finfo(x.dtype).bits < jnp.finfo(jnp.float32).bits:
+        xb, Wb = _pin(x), _pin(W.astype(x.dtype))
+        return (xb.astype(jnp.float32) @ Wb.astype(jnp.float32)).astype(x.dtype)
+    return x @ W.astype(x.dtype)
+
+
+@jax.custom_jvp
+def _pin(x: Array) -> Array:
+    """optimization_barrier with a pass-through tangent: the barrier has no
+    differentiation rule on this jax version, and training doesn't need the
+    rounding pinned anyway — only the serving forward's cross-geometry bits
+    do."""
+    return jax.lax.optimization_barrier(x)
+
+
+@_pin.defjvp
+def _pin_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _pin(x), t
+
+
 def apply_linear(params: dict, x: Array, cfg: EpLayerConfig) -> Array:
     """y = x @ W (+ b), with W possibly epitome-backed and quantized."""
     if not cfg.is_epitome:
         W = params["W"]
         if cfg.quant is not None:
             W = fake_quant(W, None, cfg.quant)
-        y = x @ W.astype(x.dtype)
+        y = exact_dot(x, W)
     else:
         y = _dispatch_epitome_matmul(params, x, cfg)
     if "b" in params:

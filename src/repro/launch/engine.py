@@ -146,6 +146,11 @@ from .mesh import make_host_mesh, mesh_for_plan, parse_mesh
 # corrupt each other's numbers.
 PREFILL_TRACES = [0]
 
+# Same idea for the fused decode macro-step: one compiled program per
+# (cfg, K) — deltas bound how many K values the auto-pick rule visited,
+# NOT how many requests were served.
+DECODE_TRACES = [0]
+
 
 # ---------------------------------------------------------------------------
 # Request-level API
@@ -207,6 +212,17 @@ class RequestHandle:
             raise RuntimeError(f"request {self._rec.rid} not finished; "
                                "step()/drain() the engine first")
         return self._rec.completion
+
+
+class _Inflight:
+    """One dispatched-but-unretired decode macro-step: the stacked token
+    futures plus a host-side snapshot of which slots emit how many tokens.
+    The snapshot is fixed at dispatch (admissions after the dispatch join
+    the NEXT macro-step), so retiring is pure bookkeeping."""
+    __slots__ = ("toks", "snapshot", "k")
+
+    def __init__(self, toks, snapshot, k: int):
+        self.toks, self.snapshot, self.k = toks, snapshot, k
 
 
 class _PrefillJob:
@@ -299,17 +315,45 @@ def _first_token(logits, key, temp):
     return _sample_row(sample_logits(logits[:, -1])[0], key, temp)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _decode_batch(params, pool, tok, pos, keys, temps, page_table, *, cfg):
-    """One decode step over the whole slot pool: per-slot positions, then
-    one per-slot sampling fold.  With ``page_table`` the attention leaves
-    of ``pool`` are the shared block-paged pool.  Freed slots decode
-    garbage in their own rows / the trash page only (per-row independence
-    + masked attention) — the host masks their tokens out."""
-    logits, pool = lm.decode_step(params, pool, tok, pos, cfg,
-                                  page_table=page_table)
-    toks, keys = _sample_rows(sample_logits(logits[:, -1]), keys, temps)
-    return toks, pool, keys
+@functools.partial(jax.jit, static_argnames=("cfg", "k"),
+                   donate_argnums=(1, 2, 4))
+def _decode_multi(params, pool, tok, pos, keys, temps, remaining,
+                  page_table, *, cfg, k):
+    """K fused decode micro-steps over the whole slot pool — ONE device
+    dispatch per K tokens (``lm.decode_scan``), sampling in-scan.
+
+    Per-slot RNG keys fold through ``_sample_rows`` exactly as the
+    one-step path did (same split order, same replicated float32 logits),
+    so the emitted stream is bit-identical to K dispatches of one step.
+    ``remaining`` counts tokens each slot still owes; rows at 0 are
+    frozen — token/position/key stop advancing mid-scan — which is how
+    idle slots (always 0) and slots whose stop fires at micro-step j < K
+    coexist with live rows in one program.  The pool tree and the
+    token/key carries are donated: the engine immediately rebinds them to
+    the returned arrays, so XLA reuses the buffers across macro-steps
+    instead of copying the KV pool every dispatch."""
+    DECODE_TRACES[0] += 1
+
+    def sample(logits, aux):
+        keys, temps, remaining = aux
+        live = remaining > 0
+        toks, nkeys = _sample_rows(sample_logits(logits), keys, temps)
+        keys = jnp.where(live[:, None], nkeys, keys)
+        remaining = jnp.where(live, remaining - 1, remaining)
+        return toks, (keys, temps, remaining), live
+
+    pool, tok, _, (keys, _, _), toks, live = lm.decode_scan(
+        params, pool, tok, pos, cfg, (keys, temps, remaining), sample, k,
+        page_table=page_table)
+    return toks, live, pool, tok, keys
+
+
+@jax.jit
+def _poke_slot(tok_arr, key_arr, slot, tok, key):
+    """Write one activated slot's first token + folded key into the
+    device-resident decode carries (keeps the steady-state loop free of
+    host->device uploads of the full (C, .) arrays)."""
+    return tok_arr.at[slot, 0].set(tok), key_arr.at[slot].set(key)
 
 
 # ---------------------------------------------------------------------------
@@ -330,6 +374,7 @@ class EngineConfig:
     page_size: int = 16              # KV page tokens; 0 = dense per-slot
     kv_pages: int = 0                # pool pages; 0 = capacity * pages/slot
     prefill_chunk: int = 64          # chunked-prefill tokens; 0 = whole
+    decode_block: int = 1            # decode micro-steps fused per dispatch
     seed: int = 0
 
     def build(self) -> "EpimEngine":
@@ -363,7 +408,8 @@ class EngineConfig:
         engine = EpimEngine(cfg, packed if packed is not None else params,
                             capacity=self.capacity, max_len=self.max_len,
                             page_size=self.page_size, kv_pages=self.kv_pages,
-                            prefill_chunk=self.prefill_chunk)
+                            prefill_chunk=self.prefill_chunk,
+                            decode_block=self.decode_block)
         engine.config, engine.mesh = self, mesh
         engine.params, engine.packed = params, packed
         engine.prompt_key, engine.sample_key = prompt_key, sample_key
@@ -378,9 +424,12 @@ class EpimEngine:
 
     def __init__(self, cfg, serve_params, capacity: int = 4,
                  max_len: int = 128, page_size: int = 16,
-                 kv_pages: int = 0, prefill_chunk: int = 64):
+                 kv_pages: int = 0, prefill_chunk: int = 64,
+                 decode_block: int = 1):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if decode_block < 1:
+            raise ValueError("decode_block must be >= 1")
         self.cfg, self.serve_params = cfg, serve_params
         self.capacity, self.max_len = capacity, max_len
         # MoE capacity routing couples every batch row (pad tokens would
@@ -399,12 +448,17 @@ class EpimEngine:
             self.chunk = -(-prefill_chunk // align) * align
         else:
             self.chunk = 0
+        self.decode_block = decode_block
         self._prefilling: Optional[_PrefillJob] = None
         self._chunks_left = 0            # per-step()/submit() chunk budget
-        self._tok = np.zeros((capacity, 1), np.int32)
-        self._key = np.zeros((capacity, 2), np.uint32)
+        # device-resident decode carries: the sampled-token and RNG-key
+        # rows never round-trip the host in steady state — macro-step k+1
+        # is dispatched straight on macro-step k's output arrays
+        self._tok = jnp.zeros((capacity, 1), jnp.int32)
+        self._key = jnp.zeros((capacity, 2), jnp.uint32)
         self._pos = np.zeros((capacity,), np.int32)
         self._temp = np.zeros((capacity,), np.float32)
+        self._inflight: Optional[_Inflight] = None
         self._free = list(range(capacity))[::-1]      # pop() -> slot 0 first
         self._used: set = set()
         self._active: Dict[int, _Record] = {}
@@ -413,6 +467,7 @@ class EpimEngine:
         self._next_id = itertools.count()
         self._slot_hwm = 0
         self._stats = {"slot_reuses": 0, "decode_steps": 0,
+                       "decode_micro_steps": 0, "decode_traces": 0,
                        "completed": 0, "admitted": 0,
                        "prefill_traces": 0, "prefill_chunks": 0}
         # set by EngineConfig.build (None for a bare-constructed engine)
@@ -455,40 +510,32 @@ class EpimEngine:
         return RequestHandle(rec)
 
     def step(self) -> int:
-        """At most one prefill chunk, then ONE batched decode step over
-        every active slot.  Returns the number of decode tokens emitted
-        (0 = nothing active)."""
+        """One pipelined engine tick: host-side work first (one prefill
+        chunk + admissions — both overlap the macro-step the device is
+        already computing), then retire that macro-step's outputs, then
+        dispatch the next macro-step asynchronously.  Returns the number
+        of decode tokens RETIRED this tick (0 = nothing was in flight).
+
+        The double-buffering lives in the device-resident carries: the
+        next dispatch consumes the previous dispatch's token/key output
+        arrays directly, so the only host<->device traffic per tick is
+        the small stacked-token download at retire — and that download
+        happens after the next macro-step is already enqueued."""
         self._chunks_left = 1
         if self._prefilling is not None:
             self._advance_prefill()
         self._admit_all()
-        if not self._active:
-            return 0
-        toks, tree, keys = _decode_batch(
-            self.serve_params, self._pool.tree, jnp.asarray(self._tok),
-            jnp.asarray(self._pos), jnp.asarray(self._key),
-            jnp.asarray(self._temp), self._pool.page_table, cfg=self.cfg)
-        self._pool.tree = tree
-        toks = np.asarray(jax.device_get(toks))
-        self._key = np.array(jax.device_get(keys))
-        self._stats["decode_steps"] += 1
-        now = time.perf_counter()
-        emitted = 0
-        for slot, rec in list(self._active.items()):
-            tok = int(toks[slot])
-            rec.tokens.append(tok)
-            rec.token_times.append(now)
-            self._tok[slot, 0] = tok
-            self._pos[slot] += 1
-            emitted += 1
-            if len(rec.tokens) >= rec.request.max_new_tokens:
-                self._finish(rec)
+        emitted = self._retire()
+        self._admit_all()                  # slots/pages freed by _retire
+        self._dispatch()
         return emitted
 
     def drain(self) -> List[Completion]:
-        """Step until no request is pending, prefilling, or active; return
-        every completion this engine has produced, in submission order."""
-        while self._pending or self._active or self._prefilling:
+        """Step until no request is pending, prefilling, active, or in
+        flight; return every completion this engine has produced, in
+        submission order."""
+        while self._pending or self._active or self._prefilling \
+                or self._inflight:
             self.step()
         return [r.completion for r in self._records
                 if r.completion is not None]
@@ -509,6 +556,66 @@ class EpimEngine:
         return len(self._pending)
 
     # -- scheduler internals ------------------------------------------------
+    def _pick_k(self) -> int:
+        """Decode micro-steps to fuse into the next dispatch: the block
+        size, clipped to the fewest remaining tokens among active slots —
+        so no slot overshoots max_new_tokens (or, equivalently, the page
+        reservation admission made for it) inside one macro-step."""
+        left = min(rec.request.max_new_tokens - len(rec.tokens)
+                   for rec in self._active.values())
+        return max(1, min(self.decode_block, left))
+
+    def _dispatch(self) -> None:
+        """Launch the next decode macro-step asynchronously (no-op when
+        nothing is active).  Host mirrors of position/remaining advance
+        immediately — they are deterministic given the snapshot — while
+        the sampled tokens stay on device until ``_retire``."""
+        if not self._active or self._inflight is not None:
+            return
+        k = self._pick_k()
+        remaining = np.zeros((self.capacity,), np.int32)
+        snapshot = []
+        for slot, rec in self._active.items():
+            r = rec.request.max_new_tokens - len(rec.tokens)
+            remaining[slot] = r
+            snapshot.append((slot, rec, min(k, r)))
+        base = DECODE_TRACES[0]
+        toks, live, tree, tok, keys = _decode_multi(
+            self.serve_params, self._pool.tree, self._tok,
+            jnp.asarray(self._pos), self._key, jnp.asarray(self._temp),
+            jnp.asarray(remaining), self._pool.page_table,
+            cfg=self.cfg, k=k)
+        self._stats["decode_traces"] += DECODE_TRACES[0] - base
+        self._pool.tree = tree
+        self._tok, self._key = tok, keys
+        for slot, _, n in snapshot:
+            self._pos[slot] += n
+        self._stats["decode_steps"] += 1
+        self._stats["decode_micro_steps"] += k
+        self._inflight = _Inflight(toks, snapshot, k)
+
+    def _retire(self) -> int:
+        """Block on the in-flight macro-step's stacked tokens and do the
+        host bookkeeping: append per-slot emissions, stamp times, finish
+        (and free) slots that reached max_new_tokens.  Pages are freed
+        HERE — the macro-step boundary — never mid-scan, so a slot whose
+        stop fired at micro-step j < K holds its reservation until the
+        step that computed it retires."""
+        inf, self._inflight = self._inflight, None
+        if inf is None:
+            return 0
+        toks = np.asarray(jax.device_get(inf.toks))   # (k, C)
+        now = time.perf_counter()
+        emitted = 0
+        for slot, rec, n in inf.snapshot:
+            for j in range(n):
+                rec.tokens.append(int(toks[j, slot]))
+                rec.token_times.append(now)
+            emitted += n
+            if len(rec.tokens) >= rec.request.max_new_tokens:
+                self._finish(rec)
+        return emitted
+
     def _bucket(self, P: int) -> int:
         if not self.bucket_prompts:
             return P
@@ -595,8 +702,8 @@ class EpimEngine:
         now = time.perf_counter()
         rec.first_tok_t = now
         rec.token_times.append(now)
-        self._tok[slot, 0] = rec.tokens[0]
-        self._key[slot] = np.asarray(jax.device_get(key))
+        self._tok, self._key = _poke_slot(self._tok, self._key,
+                                          jnp.int32(slot), tok, key)
         self._pos[slot] = len(req.prompt)
         self._temp[slot] = req.temperature
         self._stats["admitted"] += 1

@@ -225,12 +225,28 @@ def _run_lm(plan, args) -> None:
     # leaves the global mesh alone — the sharded phase below lays the
     # packed codes out itself AFTER capturing a single-device reference
     engine = EngineConfig(arch=arch, plan=plan, mesh=None, smoke=True,
-                          capacity=B, max_len=max_len, seed=args.seed).build()
+                          capacity=B, max_len=max_len, seed=args.seed,
+                          decode_block=args.decode_block).build()
     cfg, params, packed = engine.cfg, engine.params, engine.packed
     prompt_key, sample_key = engine.prompt_key, engine.sample_key
     prompts = jax.random.randint(prompt_key, (B, P), 0, cfg.vocab)
     print(f"[plan] {plan.arch}: {plan.n_epitomized}/{len(plan.layers)} "
           f"projections epitomized, prepacked={packed is not None}")
+    if args.decode_block > 1:
+        # multi-step engine decode must reproduce the one-shot greedy path
+        from .engine import Request
+        ref_toks, _ = generate(engine.serve_params, cfg, prompts, max_len, gen)
+        for row in np.asarray(jax.device_get(prompts)):
+            engine.submit(Request(prompt=row, max_new_tokens=gen))
+        comps = engine.drain()
+        ref = np.asarray(jax.device_get(ref_toks))
+        same = all(tuple(ref[i]) == comps[i].tokens
+                   for i in range(len(comps)))
+        st = engine.stats
+        print(f"[plan] engine decode_block={args.decode_block}: "
+              f"steps={st['decode_steps']} "
+              f"micro_steps={st['decode_micro_steps']} bit_identical={same}")
+        assert same, "multi-step engine decode drifted from one-shot generate"
     if args.mesh:
         served = packed if packed is not None else params
         ref_toks, _ = generate(served, cfg, prompts, max_len, gen)
@@ -377,6 +393,10 @@ def main() -> None:
     s.add_argument("--hw", type=int, default=16, help="input spatial size")
     s.add_argument("--iters", type=int, default=2)
     s.add_argument("--seed", type=int, default=0)
+    s.add_argument("--decode-block", type=int, default=1,
+                   help="LM plans: fuse this many decode micro-steps per "
+                        "engine dispatch and assert bit-identity vs the "
+                        "one-shot path (1 = skip the engine check)")
     s.set_defaults(fn=cmd_run)
 
     args = ap.parse_args()

@@ -156,6 +156,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="engine prefill chunk in tokens, rounded up to "
                          "the arch's recurrence alignment (0 = whole-"
                          "prompt prefill)")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="decode micro-steps fused into one engine "
+                         "dispatch (auto-clipped per step so no request "
+                         "overshoots max_new_tokens)")
     return ap
 
 
@@ -171,7 +175,8 @@ def main():
         arch=args.arch, epitome=args.epitome, plan=args.plan or None,
         mesh=args.mesh, smoke=args.smoke, capacity=n_req, max_len=max_len,
         page_size=args.page_size, kv_pages=args.kv_pages,
-        prefill_chunk=args.prefill_chunk, seed=args.seed).build()
+        prefill_chunk=args.prefill_chunk, decode_block=args.decode_block,
+        seed=args.seed).build()
     cfg, packed = engine.cfg, engine.packed
     served = engine.serve_params
     # the mesh that actually runs (make_host_mesh clamps to the device
@@ -211,6 +216,7 @@ def main():
         line = (f"[serve] engine: completed={len(comps)} "
                 f"p50_ttft={ttfts[len(ttfts) // 2] * 1e3:.1f}ms "
                 f"steps={st['decode_steps']} "
+                f"micro_steps={st['decode_micro_steps']} "
                 f"prefill_traces={st['prefill_traces']} "
                 f"prefill_chunks={st['prefill_chunks']} "
                 f"pages_hwm={st['pages_hwm']}/{st['pages_total']}")

@@ -137,6 +137,13 @@ def attention(params: dict, x: Array, cfg: ModelConfig, *,
     window = cfg.window if local else None
     o = _chunk_attn(q, k, v, 0, min(kv_chunk, S), True, window, cfg.attn_softcap)
     o = o.reshape(B, S, nq * hd)
+    # Replicate the head-sharded context before the output projection:
+    # the flattened head dim is wo's contraction dim, and a sharded
+    # contraction turns the down-projection into cross-device partial
+    # sums whose addition order differs from the single-device dot —
+    # bits drift and the serving cross-geometry contract breaks.  An
+    # all-gather here keeps every contraction local and bit-exact.
+    o = shard(o, BATCH_AXES, None, None)
     out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d, _nm(prefix, "wo")))
     if return_kv:
         return out, (k, v)
@@ -232,6 +239,7 @@ def chunked_prefill_attention(params: dict, x: Array, cache: dict,
                     min(cfg.attn_kv_chunk, Smax), True, window,
                     cfg.attn_softcap)
     o = o.reshape(B, C, nq * hd)
+    o = shard(o, BATCH_AXES, None, None)   # replicate wo's contraction dim
     out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d, _nm(prefix, "wo")))
     return out, cache
 
@@ -331,5 +339,6 @@ def decode_attention(params: dict, x: Array, cache: dict,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, vc)
     o = o.reshape(B, 1, nq * hd).astype(x.dtype)
+    o = shard(o, BATCH_AXES, None, None)   # replicate wo's contraction dim
     out = apply_linear(params["wo"], o, cfg.ep(nq * hd, d, _nm(prefix, "wo")))
     return out, cache

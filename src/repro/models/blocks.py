@@ -44,7 +44,13 @@ def ffn(params: dict, x: Array, cfg: ModelConfig, prefix: str = "") -> Array:
     g = apply_linear(params["w_gate"], x, cfg.ep(d, ff, _nm(prefix, "w_gate")))
     u = apply_linear(params["w_up"], x, cfg.ep(d, ff, _nm(prefix, "w_up")))
     h = act(g) * u
-    h = shard(h, BATCH_AXES, None, TENSOR_AXIS)
+    # Replicate the hidden dim before w_down: it is w_down's contraction
+    # dim, and keeping it tensor-sharded (Megatron row-parallel) turns the
+    # down-projection into cross-device partial sums whose addition order
+    # differs from the single-device dot — bits drift and the serving
+    # cross-geometry bit-exactness contract breaks.  All-gather here keeps
+    # every contraction local.
+    h = shard(h, BATCH_AXES, None, None)
     return apply_linear(params["w_down"], h, cfg.ep(ff, d, _nm(prefix, "w_down")))
 
 

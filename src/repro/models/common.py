@@ -104,7 +104,21 @@ def rope_freqs(hd: int, theta: float) -> Array:
 
 
 def apply_rope(x: Array, positions: Array, theta: float) -> Array:
-    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    """x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    The rotated halves are assembled with stack+reshape rather than
+    ``jnp.concatenate``: under a mesh, the concat formulation downstream of
+    a head reshape whose head count does not divide the tensor axis (e.g.
+    2 KV heads on a 4-way 'model' axis) trips a GSPMD partitioner bug on
+    the CPU backend that re-reduces an already-replicated value — outputs
+    come back exactly 2x too large, silently corrupting every sharded
+    attention arch.  stack+reshape lowers to different HLO, produces
+    bit-identical values on a single device, and partitions correctly, so
+    sharded serving is bit-exact against the single-device path.  The
+    constraint pins the head-parallel layout (degrading to replicated when
+    heads don't divide the axis) so the choice is explicit, not
+    propagation luck."""
+    x = shard(x, BATCH_AXES, None, TENSOR_AXIS, None)
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                       # (hd/2,)
     angles = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
@@ -112,9 +126,10 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
         angles = angles[None]
     cos = jnp.cos(angles)[:, :, None, :]
     sin = jnp.sin(angles)[:, :, None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
-    return out.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : hd // 2], xf[..., hd // 2:]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-2)
+    return out.reshape(x.shape).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -139,5 +154,6 @@ def embed_lookup(table: Array, ids: Array, compute_dtype) -> Array:
 
 
 def unembed(x: Array, table: Array, logit_cap: float = 0.0) -> Array:
-    logits = x @ table.astype(x.dtype)
+    from ..core.layers import exact_dot
+    logits = exact_dot(x, table)
     return softcap(logits, logit_cap)

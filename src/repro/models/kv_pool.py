@@ -156,6 +156,7 @@ class SlotStatePool:
             self._page_reuses = 0
         else:
             self._table = None
+        self._table_dev: Optional[Array] = None
 
     def _init_tree(self) -> Dict[str, Any]:
         one = jax.eval_shape(
@@ -203,6 +204,7 @@ class SlotStatePool:
         self._slot_pages[slot] = pages
         self._table[slot] = self.page.trash
         self._table[slot, :n] = pages
+        self._table_dev = None            # host table changed; re-upload lazily
         self._pages_hwm = max(self._pages_hwm, self.pages_used)
 
     def free(self, slot: int) -> None:
@@ -211,6 +213,7 @@ class SlotStatePool:
         for p in reversed(self._slot_pages.pop(slot, [])):
             self._free_pages.append(p)
         self._table[slot] = self.page.trash
+        self._table_dev = None
 
     @property
     def pages_used(self) -> int:
@@ -234,8 +237,16 @@ class SlotStatePool:
     @property
     def page_table(self) -> Optional[Array]:
         """The (capacity, pages_per_slot) int32 operand the jitted decode
-        gathers KV through; None for a dense pool."""
-        return None if self._table is None else jnp.asarray(self._table)
+        gathers KV through; None for a dense pool.  The device copy is
+        cached between admissions/frees: the steady-state decode loop then
+        re-dispatches the SAME committed array instead of re-uploading the
+        host table every macro-step (the upload sat on the dispatch hot
+        path this PR exists to thin out)."""
+        if self._table is None:
+            return None
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self._table)
+        return self._table_dev
 
     def table_row(self, slot: int) -> Optional[Array]:
         return None if self._table is None else jnp.asarray(self._table[slot])

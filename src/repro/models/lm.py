@@ -403,3 +403,45 @@ def decode_step(params: Dict[str, Any], state: Dict[str, Any], token: Array,
     head = params.get("head", params["embed"].T if cfg.tie_embeddings else None)
     logits = unembed(x, head, cfg.logit_softcap)
     return logits, new_states
+
+
+def decode_scan(params: Dict[str, Any], state: Dict[str, Any], tok: Array,
+                pos: Array, cfg: ModelConfig, aux: Any, sample, k: int,
+                page_table: Optional[Array] = None):
+    """Fuse ``k`` decode micro-steps into ONE ``lax.scan`` over the decode
+    state — one device dispatch per K tokens instead of one per token.
+
+    ``sample(logits, aux) -> (toks, aux, live)`` is the caller's sampling
+    policy, traced into the scan body: ``logits`` is the (B, vocab)
+    last-position row, ``toks`` the (B,) int32 next tokens, and ``live``
+    a (B,) bool mask of rows still generating.  Rows where ``live`` is
+    False are FROZEN: their carried token and position stop advancing, so
+    a row that hits its stop condition at micro-step j < k keeps replaying
+    its final (token, position) pair for the remaining micro-steps — the
+    KV row it rewrites is the one it already owns (never past its page
+    reservation), and per-row independence keeps the dead row's arithmetic
+    away from live rows exactly as it does for freed slots.  State is
+    deliberately NOT masked per row (that would copy the whole pool every
+    micro-step): frozen attention rows rewrite their own cache rows
+    idempotently and frozen recurrent rows advance into garbage a later
+    ``scatter`` overwrites wholesale.
+
+    ``page_table`` rides the scan as a loop-invariant operand: admission
+    reserves every page a request will ever touch up front, so advancing
+    ``pos`` inside the carry walks the table across page boundaries
+    without the host re-mapping anything mid-scan.
+
+    Returns ``(state, tok, pos, aux, toks, live)`` with ``toks``/``live``
+    stacked (k, B) — the per-micro-step emissions and their validity."""
+    def body(carry, _):
+        state, tok, pos, aux = carry
+        logits, state = decode_step(params, state, tok, pos, cfg,
+                                    page_table=page_table)
+        toks, aux, live = sample(logits[:, -1], aux)
+        tok = jnp.where(live[:, None], toks[:, None].astype(tok.dtype), tok)
+        pos = jnp.where(live, pos + 1, pos)
+        return (state, tok, pos, aux), (toks, live)
+
+    (state, tok, pos, aux), (toks, live) = jax.lax.scan(
+        body, (state, tok, pos, aux), None, length=k)
+    return state, tok, pos, aux, toks, live

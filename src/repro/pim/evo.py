@@ -182,6 +182,13 @@ def evolution_search(
                    and scored[front_n][0] > 0):
                 front_n += 1
             front = scored[:front_n]
+            # batch the front's not-yet-cached timings into as few device
+            # programs as possible (one per runner shape) before the
+            # per-candidate totals below hit the memo
+            prime = getattr(cost, "prime", None)
+            if prime is not None and front:
+                prime(layers, [specs_of(ind) for _, ind, _ in front],
+                      weight_bits)
             measured = [(measure(ind), r, ind, sim) for r, ind, sim in front]
             ok = all(m is not None for m, _, _, _ in measured)
             if ok and measured:

@@ -300,6 +300,77 @@ class TestMeasuredSearch:
         assert won <= best_logged * 1.5 + 1e-3
 
 
+class TestPrime:
+    """Batched elite-front measurement: MeasuredCost.prime stacks the
+    front's unknown same-shaped runners into one jitted program per shape
+    group and times each group ONCE — cache keys, the persisted entry
+    format, and timed-once semantics unchanged."""
+
+    def test_prime_then_scoring_hits_memo(self, tmp_path):
+        layers, plan = _setup()
+        timer = CountingTimer()
+        cm = _cm(tmp_path, timer=timer)
+        n = cm.prime(layers, [plan.specs()], plan.bits())
+        assert n >= 1
+        assert timer.calls == n == cm.timings        # one call per group
+        c = cm.plan_cost(plan)
+        assert timer.calls == n                      # scoring re-times nothing
+        assert c.measured_s is not None
+        assert all(lc.source == "memo" for lc in c.layers
+                   if lc.measured_s is not None)
+        # grouping strictly batches: fewer programs than unique keys
+        unique = {lc.key for lc in c.layers if lc.measured_s is not None}
+        assert n <= len(unique)
+
+    def test_prime_stacks_same_shaped_runners(self, tmp_path):
+        """Dense runners ignore weight bits, so the b3/b5 variants of one
+        dense geometry are two distinct KEYS served by ONE stacked timing,
+        each billed the per-member share of the group wall."""
+        layers, _ = _setup()
+        l = layers[0]
+        timer = CountingTimer()
+        cm = _cm(tmp_path, timer=timer)
+        n = cm.prime([l, l], [[None, None]], [3, 5])
+        assert n == 1 == timer.calls                 # one program, two keys
+        assert cm.layer_key(l, None, 3) != cm.layer_key(l, None, 5)
+        costs = cm.layer_costs([l, l], [None, None], [3, 5])
+        assert timer.calls == 1
+        assert costs[0].key != costs[1].key
+        assert costs[0].measured_s == pytest.approx(costs[1].measured_s)
+        # CountingTimer's first call returns 100us -> 50us per member
+        assert costs[0].measured_s == pytest.approx(50.0e-6)
+
+    def test_prime_skips_known_keys(self, tmp_path):
+        layers, plan = _setup()
+        timer = CountingTimer()
+        cm = _cm(tmp_path, timer=timer)
+        cm.plan_cost(plan)
+        before = timer.calls
+        assert cm.prime(layers, [plan.specs()], plan.bits()) == 0
+        assert timer.calls == before
+
+    def test_prime_persists_to_shared_cache(self, tmp_path):
+        """Primed shares land under the same measure/<key> entries a solo
+        timing writes, so a fresh instance is fully cache-served."""
+        layers, plan = _setup()
+        cm1 = _cm(tmp_path)
+        assert cm1.prime(layers, [plan.specs()], plan.bits()) >= 1
+        t2 = CountingTimer()
+        cm2 = _cm(tmp_path, timer=t2)
+        c = cm2.plan_cost(plan)
+        assert t2.calls == cm2.timings == 0
+        assert all(lc.source == "cache" for lc in c.layers
+                   if lc.measured_s is not None)
+
+    def test_prime_failing_timer_degrades(self, tmp_path):
+        layers, plan = _setup()
+        cm = _cm(tmp_path, timer=FailingTimer())
+        with pytest.warns(UserWarning, match="degrading to analytic"):
+            assert cm.prime(layers, [plan.specs()], plan.bits()) == 0
+        assert not cm.available
+        assert cm.prime(layers, [plan.specs()], plan.bits()) == 0
+
+
 class TestProvenance:
     def test_legalize_stamps_analytic_cost_by_default(self):
         _, plan = _setup()

@@ -118,6 +118,149 @@ def test_engine_bit_identical_attention_arch(engine_factory):
 
 
 # ---------------------------------------------------------------------------
+# Multi-step fused decode (decode_block > 1)
+# ---------------------------------------------------------------------------
+def _run_reqs(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    return eng.drain()
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_multistep_bit_identical_dense(engine_factory, k):
+    """K fused micro-steps on the dense recurrent pool: greedy and
+    sampled rows mixed in one macro-step, all bit-identical to the
+    one-shot path (K=1 is the pre-existing tests above)."""
+    eng = engine_factory(capacity=3, decode_block=k)
+    rng = np.random.default_rng(10 + k)
+    reqs = [Request(prompt=_prompt(rng, p, eng.cfg.vocab), max_new_tokens=m,
+                    temperature=t, seed=200 + i)
+            for i, (p, m, t) in enumerate(
+                [(5, 6, 0.0), (9, 5, 0.9), (13, 9, 0.0), (7, 7, 1.2)])]
+    comps = _run_reqs(eng, reqs)
+    for req, comp in zip(reqs, comps):
+        assert comp.tokens == _reference(eng, req)
+        assert len(comp.tokens) == req.max_new_tokens
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_multistep_bit_identical_paged_chunked(engine_factory, k):
+    """Same contract on an attention arch with block-paged KV and chunked
+    prefill: the page-table gather and the in-scan position advance keep
+    every micro-step's KV row exactly where the one-step path wrote it."""
+    eng = engine_factory(capacity=3, arch="qwen2-72b", epitome="off",
+                         decode_block=k, page_size=8, prefill_chunk=8)
+    rng = np.random.default_rng(20 + k)
+    reqs = [Request(prompt=_prompt(rng, p, eng.cfg.vocab), max_new_tokens=m,
+                    temperature=t, seed=300 + i)
+            for i, (p, m, t) in enumerate(
+                [(6, 6, 0.0), (11, 5, 0.8), (21, 8, 0.0)])]
+    comps = _run_reqs(eng, reqs)
+    assert eng.stats["prefill_chunks"] > 0        # long prompts chunked
+    for req, comp in zip(reqs, comps):
+        assert comp.tokens == _reference(eng, req)
+
+
+def test_multistep_amortizes_dispatches(engine_factory):
+    """The point of the PR: K=4 serves the same tokens in ~1/4 the device
+    dispatches, and the macro-step program compiles once per K — never
+    per request."""
+    rng = np.random.default_rng(12)
+    vocab = get_smoke_config("rwkv6-7b", "kernel-q3").vocab
+    reqs = [Request(prompt=_prompt(rng, 5, vocab), max_new_tokens=9, seed=i)
+            for i in range(3)]
+    e1 = engine_factory(capacity=3, decode_block=1)
+    e4 = engine_factory(capacity=3, decode_block=4)
+    c1 = _run_reqs(e1, reqs)
+    c4 = _run_reqs(e4, reqs)
+    assert [c.tokens for c in c1] == [c.tokens for c in c4]
+    assert e1.stats["decode_steps"] == 8           # 8 post-prefill tokens
+    assert e4.stats["decode_steps"] == 2           # 2 macro-steps of 4
+    assert e4.stats["decode_micro_steps"] == 8
+
+
+def test_multistep_pipeline_dispatch_then_retire(engine_factory):
+    """step() dispatches macro-step k+1 before blocking on k: admission
+    alone never dispatches, the first tick after admission launches
+    (nothing to retire yet), and the next tick retires K tokens — host
+    scheduling work in between overlaps the device compute."""
+    eng = engine_factory(capacity=1, decode_block=4)
+    rng = np.random.default_rng(14)
+    h = eng.submit(Request(prompt=_prompt(rng, 5, eng.cfg.vocab),
+                           max_new_tokens=9))
+    assert eng._inflight is None          # admission alone doesn't dispatch
+    assert eng.step() == 0                # tick 1: dispatch only
+    assert eng._inflight is not None and not h.done()
+    assert eng.step() == 4                # tick 2: retire k, dispatch next
+    assert eng.step() == 4
+    assert eng.drain() and h.done()
+    assert len(h.result().tokens) == 9
+
+
+def test_midscan_termination_matches_k1(engine_factory):
+    """Satellite contract: a slot whose stop fires at micro-step j < K
+    (forced by pinning _pick_k above its remaining tokens) emits exactly
+    max_new_tokens, bit-identical to K=1, frees its pages at the retire
+    boundary of the macro-step that finished it, and its position never
+    advances past the page reservation."""
+    rng = np.random.default_rng(15)
+    vocab = get_smoke_config("qwen2-72b").vocab
+    reqs = [Request(prompt=_prompt(rng, 6, vocab), max_new_tokens=3,
+                    seed=40),                      # freezes at j=2 of K=4
+            Request(prompt=_prompt(rng, 9, vocab), max_new_tokens=10,
+                    temperature=0.7, seed=41)]
+    ref = engine_factory(capacity=2, arch="qwen2-72b", epitome="off",
+                         decode_block=1, page_size=8)
+    c_ref = _run_reqs(ref, reqs)
+
+    eng = engine_factory(capacity=2, arch="qwen2-72b", epitome="off",
+                         decode_block=4, page_size=8)
+    eng._pick_k = lambda: 4               # force K past slot 0's remaining
+    handles = [eng.submit(r) for r in reqs]
+    short_pages = eng._pool.pages_needed(len(reqs[0].prompt)
+                                         + reqs[0].max_new_tokens)
+    assert short_pages > 0
+    while not handles[0].done():
+        free_before = eng._pool.pages_free
+        emitted = eng.step()
+        for slot, rec in eng._active.items():
+            assert eng._pos[slot] <= (len(rec.request.prompt)
+                                      + rec.request.max_new_tokens - 1)
+        if handles[0].done():
+            # pages freed at THIS retire boundary, in full, not before
+            assert eng._pool.pages_free == free_before + short_pages
+            assert emitted > 0
+    eng.drain()
+    comps = [h.result() for h in handles]
+    for a, b in zip(c_ref, comps):
+        assert a.tokens == b.tokens
+        assert a.prompt_len == b.prompt_len
+    assert len(comps[0].tokens) == reqs[0].max_new_tokens
+
+
+def test_multistep_decode_traces_bounded():
+    """One compiled macro-step per (cfg, K) — the auto-pick rule visits at
+    most decode_block distinct K values, never one trace per request.
+    A capacity no other test uses gives this engine a cold decode cache
+    (the dense pool's decode shapes depend on capacity, not max_len)."""
+    eng = EngineConfig(arch="rwkv6-7b", epitome="kernel-q3", smoke=True,
+                       mesh=None, capacity=5, max_len=MAX_LEN,
+                       decode_block=4).build()
+    rng = np.random.default_rng(16)
+    reqs = [Request(prompt=_prompt(rng, 5, eng.cfg.vocab),
+                    max_new_tokens=3 + 2 * i, seed=i) for i in range(6)]
+    _run_reqs(eng, reqs)
+    assert eng.stats["completed"] == 6
+    assert 1 <= eng.stats["decode_traces"] <= eng.decode_block
+
+
+def test_decode_block_validation():
+    with pytest.raises(ValueError, match="decode_block"):
+        EpimEngine(get_smoke_config("rwkv6-7b"), None, capacity=1,
+                   max_len=16, decode_block=0)
+
+
+# ---------------------------------------------------------------------------
 # Scheduler: slots, buckets, retraces
 # ---------------------------------------------------------------------------
 def test_slot_reuse_mid_flight(engine_factory):
@@ -242,32 +385,37 @@ def test_serving_bench_smoke(engine_factory):
 @pytest.mark.slow
 def test_engine_sharded_mesh_bit_identical():
     """The engine on a (2, 4) host mesh serves requests bit-identical to
-    the one-shot sharded path — slots, buckets and per-request RNG all
-    survive sharded weight-stationary serving."""
+    the one-shot sharded path — slots, buckets, per-request RNG, AND the
+    K=4 fused decode scan all survive sharded weight-stationary
+    serving (the last cell of the decode_block acceptance matrix)."""
     from test_sharded_plan import run_py
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch import serve
         from repro.launch.engine import EngineConfig, Request
 
-        eng = EngineConfig(arch="rwkv6-7b", epitome="kernel-q3", smoke=True,
-                           mesh="2,4", capacity=2, max_len=32).build()
-        assert dict(eng.mesh.shape) == {"data": 2, "model": 4}
-        rng = np.random.default_rng(0)
-        reqs = [Request(prompt=tuple(int(t) for t in
-                                     rng.integers(0, eng.cfg.vocab, p)),
-                        max_new_tokens=6, temperature=t, seed=5 + i)
-                for i, (p, t) in enumerate([(5, 0.0), (9, 0.8), (13, 0.0)])]
-        for r in reqs:
-            eng.submit(r)
-        comps = eng.drain()
-        assert eng.stats["slot_reuses"] == 1
-        for r, c in zip(reqs, comps):
-            ref, _ = serve.generate(
-                eng.serve_params, eng.cfg,
-                jnp.asarray(np.asarray(r.prompt, np.int32)[None]),
-                eng.max_len, r.max_new_tokens, temperature=r.temperature,
-                key=jax.random.PRNGKey(r.seed))
-            assert tuple(int(x) for x in np.asarray(ref)[0]) == c.tokens
+        for k in (1, 4):
+            eng = EngineConfig(arch="rwkv6-7b", epitome="kernel-q3",
+                               smoke=True, mesh="2,4", capacity=2,
+                               max_len=32, decode_block=k).build()
+            assert dict(eng.mesh.shape) == {"data": 2, "model": 4}
+            r0 = np.random.default_rng(0)
+            reqs = [Request(prompt=tuple(int(t) for t in
+                                         r0.integers(0, eng.cfg.vocab, p)),
+                            max_new_tokens=6, temperature=t, seed=5 + i)
+                    for i, (p, t) in enumerate(
+                        [(5, 0.0), (9, 0.8), (13, 0.0)])]
+            for r in reqs:
+                eng.submit(r)
+            comps = eng.drain()
+            assert eng.stats["slot_reuses"] == 1
+            for r, c in zip(reqs, comps):
+                ref, _ = serve.generate(
+                    eng.serve_params, eng.cfg,
+                    jnp.asarray(np.asarray(r.prompt, np.int32)[None]),
+                    eng.max_len, r.max_new_tokens,
+                    temperature=r.temperature,
+                    key=jax.random.PRNGKey(r.seed))
+                assert tuple(int(x) for x in np.asarray(ref)[0]) == c.tokens
         print("ENGINE SHARDED OK")
     """)
